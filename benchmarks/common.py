@@ -1,0 +1,29 @@
+"""Shared benchmark plumbing: CSV rows + cached simulation results."""
+from __future__ import annotations
+
+import functools
+import time
+
+from repro.core.cache_geometry import XEON_E5_35MB, XEON_45MB, XEON_60MB
+from repro.core.simulator import NetworkResult, simulate_network
+from repro.models.inception import inception_v3_specs
+
+
+@functools.lru_cache(maxsize=None)
+def sim(mb: int = 35) -> NetworkResult:
+    geom = {35: XEON_E5_35MB, 45: XEON_45MB, 60: XEON_60MB}[mb]
+    return simulate_network(inception_v3_specs(), geom)
+
+
+def row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.4f},{derived}"
+
+
+def timed(fn, *args, iters: int = 3, **kw):
+    """Wall-time a python callable (model-evaluation cost, informational)."""
+    fn(*args, **kw)  # warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / iters
+    return out, dt * 1e6

@@ -1,0 +1,49 @@
+"""Kernel benches: fused W8A8 and bit-serial GEMM vs fp32 XLA dot.
+
+CPU wall-times are informational (TPU is the target); the structural
+result is the plane-count scaling of the bit-serial kernel — the paper's
+precision-proportional-latency property (Stripes-style) — measured as
+HLO FLOPs of the lowered kernel, which *is* hardware-portable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timed
+from repro.core.quantize import choose_qparams_symmetric, quantize, quantize_per_channel
+from repro.kernels import ops as K
+
+
+def run():
+    out = []
+    k1, k2 = jax.random.split(jax.random.key(0))
+    M, Kdim, N = 256, 512, 256
+    x = jax.random.normal(k1, (M, Kdim), jnp.float32)
+    w = jax.random.normal(k2, (Kdim, N), jnp.float32) * 0.2
+    qp = choose_qparams_symmetric(jnp.max(jnp.abs(x)))
+    xq = quantize(x, qp)
+
+    f32 = jax.jit(lambda a, b: a @ b)
+    _, us = timed(lambda: jax.block_until_ready(f32(x, w)))
+    out.append(row("kernel/f32_dot", us, f"{M}x{Kdim}x{N}"))
+
+    wq, ws = quantize_per_channel(w)
+    q8 = jax.jit(lambda a, b: K.quant_matmul(a, b, qp.scale, ws.reshape(-1)))
+    _, us = timed(lambda: jax.block_until_ready(q8(xq, wq)))
+    out.append(row("kernel/w8a8_fused", us, "int8 MXU path (xla ref on cpu)"))
+
+    base_flops = None
+    for bits in (8, 4, 2, 1):
+        wqb, wsb = quantize_per_channel(w, bits=bits)
+        planes = K.pack_weights(wqb.astype(jnp.int32), bits)
+        fn = jax.jit(lambda a, p: K.bitserial_matmul(
+            a, p, qp.scale, wsb.reshape(-1)))
+        flops = fn.lower(xq, planes).compile().cost_analysis().get("flops", 0)
+        if bits == 8:
+            base_flops = flops
+        _, us = timed(lambda: jax.block_until_ready(fn(xq, planes)))
+        out.append(row(f"kernel/bitserial_{bits}b", us,
+                       f"{planes.shape[0]} planes; HLO flops "
+                       f"{flops/base_flops:.2f}x of 8b"))
+    return out

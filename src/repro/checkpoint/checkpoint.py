@@ -1,0 +1,174 @@
+"""Atomic, async, *elastic* checkpointing.
+
+  * **Atomic**: writes go to ``step_N.tmp-<nonce>/`` and are renamed to
+    ``step_N/`` only after fsync — a preempted save never corrupts the
+    latest checkpoint, restart picks up the newest complete directory.
+  * **Async**: ``AsyncCheckpointer`` snapshots arrays to host memory on the
+    training thread (cheap) and does serialization/IO on a worker thread,
+    overlapping with the next training steps; ``wait()`` joins before the
+    next save or at exit.
+  * **Elastic**: arrays are stored as full *logical* tensors plus the tree
+    structure — nothing about the mesh is persisted, so a checkpoint taken
+    on (16, 16) restores onto (2, 16, 16) or a single CPU by resharding on
+    load (``jax.device_put`` against the new sharding tree).  This is what
+    lets the fleet resume after losing a pod.
+
+Format: one ``.npz`` per pytree (params / opt_state / extras) + a JSON
+manifest with the step, tree structure and leaf dtypes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import re
+import shutil
+import tempfile
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "AsyncCheckpointer"]
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+# ---------------------------------------------------------------------------
+# pytree <-> flat dict of arrays
+# ---------------------------------------------------------------------------
+def _flatten(tree: Any) -> tuple[dict[str, np.ndarray], str]:
+    leaves, treedef = jax.tree.flatten(tree)
+    flat = {f"leaf_{i}": np.asarray(jax.device_get(x))
+            for i, x in enumerate(leaves)}
+    return flat, str(treedef)
+
+
+def _save_tree(path: pathlib.Path, name: str, tree: Any) -> dict:
+    flat, treedef = _flatten(tree)
+    np.savez(path / f"{name}.npz", **flat)
+    return {"treedef": treedef, "n_leaves": len(flat)}
+
+
+def _load_tree(path: pathlib.Path, name: str, like: Any,
+               shardings: Any = None) -> Any:
+    with np.load(path / f"{name}.npz") as z:
+        leaves = [z[f"leaf_{i}"] for i in range(len(z.files))]
+    like_leaves, treedef = jax.tree.flatten(like)
+    if len(leaves) != len(like_leaves):
+        raise ValueError(
+            f"checkpoint {name}: {len(leaves)} leaves, expected "
+            f"{len(like_leaves)} — structure changed?")
+    if shardings is not None:
+        sh_leaves = jax.tree.leaves(
+            shardings, is_leaf=lambda s: isinstance(s, jax.sharding.Sharding))
+        out = [jax.device_put(a.astype(l.dtype), s)
+               for a, l, s in zip(leaves, like_leaves, sh_leaves)]
+    else:
+        out = [jax.numpy.asarray(a.astype(l.dtype)) for a, l in
+               zip(leaves, like_leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+def save_checkpoint(ckpt_dir: str | os.PathLike, step: int,
+                    trees: dict[str, Any], extras: dict | None = None) -> str:
+    """Write ``trees`` (name -> pytree) atomically; returns the final path."""
+    root = pathlib.Path(ckpt_dir)
+    root.mkdir(parents=True, exist_ok=True)
+    final = root / f"step_{step}"
+    tmp = pathlib.Path(tempfile.mkdtemp(prefix=f"step_{step}.tmp-", dir=root))
+    try:
+        manifest = {"step": step, "trees": {}, "extras": extras or {}}
+        for name, tree in trees.items():
+            manifest["trees"][name] = _save_tree(tmp, name, tree)
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        fd = os.open(tmp, os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return str(final)
+
+
+def latest_step(ckpt_dir: str | os.PathLike) -> int | None:
+    root = pathlib.Path(ckpt_dir)
+    if not root.exists():
+        return None
+    steps = [int(m.group(1)) for p in root.iterdir()
+             if (m := _STEP_RE.match(p.name)) and (p / "manifest.json").exists()]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str | os.PathLike, likes: dict[str, Any],
+                       step: int | None = None,
+                       shardings: dict[str, Any] | None = None):
+    """Restore trees by name; reshards onto ``shardings`` if given.
+
+    Returns (step, {name: tree}, extras) or (None, None, None) when no
+    complete checkpoint exists (fresh start).
+    """
+    root = pathlib.Path(ckpt_dir)
+    step = latest_step(root) if step is None else step
+    if step is None:
+        return None, None, None
+    path = root / f"step_{step}"
+    manifest = json.loads((path / "manifest.json").read_text())
+    out = {}
+    for name, like in likes.items():
+        sh = (shardings or {}).get(name)
+        out[name] = _load_tree(path, name, like, sh)
+    return step, out, manifest.get("extras", {})
+
+
+class AsyncCheckpointer:
+    """Snapshot on the caller thread, serialize+write on a worker thread."""
+
+    def __init__(self, ckpt_dir: str | os.PathLike, keep: int = 3):
+        self.ckpt_dir = pathlib.Path(ckpt_dir)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    def save(self, step: int, trees: dict[str, Any],
+             extras: dict | None = None) -> None:
+        self.wait()
+        # snapshot to host memory NOW (donated buffers may be reused next step)
+        host_trees = {name: jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                         tree)
+                      for name, tree in trees.items()}
+
+        def work():
+            try:
+                save_checkpoint(self.ckpt_dir, step, host_trees, extras)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(m.group(1)) for p in self.ckpt_dir.iterdir()
+            if (m := _STEP_RE.match(p.name)))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.ckpt_dir / f"step_{s}", ignore_errors=True)

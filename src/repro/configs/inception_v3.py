@@ -1,0 +1,7 @@
+"""inception-v3 — the paper's own evaluation workload (not an LM cell).
+
+Selectable via --arch inception-v3 in the launchers; maps onto the Neural
+Cache simulator and the quantized-inference example."""
+from repro.models.inception import inception_v3_specs  # noqa: F401
+
+NAME = "inception-v3"

@@ -1,0 +1,16 @@
+"""qwen1.5-32b [dense]: GQA kv=40 (MHA), QKV bias [hf:Qwen/Qwen1.5-0.5B; hf]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=40,
+    d_ff=27392,
+    vocab_size=152064,
+    qkv_bias=True,
+    norm="rmsnorm",
+    act="swiglu",
+)

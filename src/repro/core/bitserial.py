@@ -1,0 +1,303 @@
+"""Bit-serial in-SRAM arithmetic — functional, bit-exact emulation.
+
+This module is the paper's §III (Neural Cache Arithmetic) as executable JAX.
+Data lives in the *transposed* layout: an unsigned n-bit tensor becomes n
+binary *planes* (LSB first).  Plane axis == word-line axis; every other axis
+is a bit line.  All element lanes advance in lockstep, exactly like the
+SRAM array: one bit-slice per cycle, carry/tag held in per-bit-line latches.
+
+Every operation returns ``(result_planes, cycles)`` where ``cycles`` follows
+the paper's published formulas:
+
+    add        : n + 1                     (§III-B)
+    multiply   : n^2 + 5n - 2              (§III-C)
+    divide     : 1.5 n^2 + 5.5 n           (§III-C)
+    reduction  : log2(k) x (move + widening add)   (§III-D)
+
+The emulation is *bit-exact* against integer arithmetic (tests/test_bitserial.py
+sweeps this with hypothesis); the cycle counts feed core/simulator.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "bitplane_pack",
+    "bitplane_unpack",
+    "add_cycles",
+    "mul_cycles",
+    "div_cycles",
+    "reduce_cycles",
+    "bitserial_add",
+    "bitserial_sub",
+    "bitserial_multiply",
+    "bitserial_mac",
+    "bitserial_reduce",
+    "selective_copy",
+    "bitserial_relu",
+    "bitserial_max",
+]
+
+_PLANE_DTYPE = jnp.uint8
+
+
+# ---------------------------------------------------------------------------
+# Transposed (bit-plane) layout — the software analogue of the paper's TMU.
+# ---------------------------------------------------------------------------
+def bitplane_pack(x: jax.Array, n_bits: int) -> jax.Array:
+    """Pack an unsigned integer tensor into ``n_bits`` binary planes (LSB first).
+
+    Returns shape ``(n_bits, *x.shape)`` with values in {0, 1}.  This is the
+    paper's transpose layout: plane index == word line, remaining axes == bit
+    lines.
+    """
+    x = x.astype(jnp.uint32)
+    shifts = jnp.arange(n_bits, dtype=jnp.uint32)
+    planes = (x[None, ...] >> shifts.reshape((n_bits,) + (1,) * x.ndim)) & 1
+    return planes.astype(_PLANE_DTYPE)
+
+
+def bitplane_unpack(planes: jax.Array, signed: bool = False) -> jax.Array:
+    """Inverse of :func:`bitplane_pack`.  ``signed`` interprets the planes as
+    two's complement of width ``planes.shape[0]``."""
+    n = planes.shape[0]
+    weights = (jnp.uint32(1) << jnp.arange(n, dtype=jnp.uint32)).reshape(
+        (n,) + (1,) * (planes.ndim - 1)
+    )
+    val = jnp.sum(planes.astype(jnp.uint32) * weights, axis=0).astype(jnp.int64)
+    if signed:
+        val = jnp.where(planes[-1].astype(bool), val - (1 << n), val)
+    return val
+
+
+# ---------------------------------------------------------------------------
+# Cycle formulas (paper §III).
+# ---------------------------------------------------------------------------
+def add_cycles(n: int) -> int:
+    return n + 1
+
+
+def mul_cycles(n: int) -> int:
+    return n * n + 5 * n - 2
+
+
+def div_cycles(n: int) -> float:
+    return 1.5 * n * n + 5.5 * n
+
+
+def move_cycles(n: int) -> int:
+    # Word-line move: read + write-back per bit; sense-amp cycling folds this
+    # to ~1 cycle/bit in column-multiplexed arrays (§III-D, [18]).
+    return n
+
+
+def reduce_cycles(k: int, width: int) -> int:
+    """Cycles to reduce ``k`` elements of ``width`` bits to one sum in-array."""
+    cyc = 0
+    w = width
+    steps = int(np.ceil(np.log2(max(k, 1))))
+    for _ in range(steps):
+        cyc += move_cycles(w) + add_cycles(w)
+        w += 1
+    return cyc
+
+
+# ---------------------------------------------------------------------------
+# The column peripheral: full adder + carry latch + tag latch, one bit-slice
+# per cycle.  Python loops are over *bits* (static, <=64) — element lanes are
+# fully vectorized, mirroring the massively-parallel bit lines.
+# ---------------------------------------------------------------------------
+def _full_adder(a, b, c):
+    s = a ^ b ^ c
+    carry = (a & b) | ((a ^ b) & c)
+    return s, carry
+
+
+def _plane(x: jax.Array, i: int, shape, like) -> jax.Array:
+    if i < x.shape[0]:
+        return x[i]
+    return jnp.zeros(shape, _PLANE_DTYPE)
+
+
+def bitserial_add(a: jax.Array, b: jax.Array, out_bits: int | None = None):
+    """Element-wise sum of two plane tensors.  Returns (planes, cycles)."""
+    n = max(a.shape[0], b.shape[0])
+    out_bits = out_bits if out_bits is not None else n + 1
+    lane_shape = a.shape[1:]
+    carry = jnp.zeros(lane_shape, _PLANE_DTYPE)
+    out = []
+    for i in range(out_bits):
+        ai = _plane(a, i, lane_shape, a)
+        bi = _plane(b, i, lane_shape, b)
+        s, carry = _full_adder(ai, bi, carry)
+        out.append(s)
+    return jnp.stack(out), add_cycles(n)
+
+
+def bitserial_sub(a: jax.Array, b: jax.Array, out_bits: int | None = None):
+    """a - b in two's complement (width = max width + 1 by default).
+
+    Implemented the SRAM way: complement planes of ``b`` are read from BLB
+    (free), carry latch preset to 1.  Returns (planes, cycles); MSB of the
+    result is the sign — it drives the tag latch for max/ReLU predication.
+    """
+    n = max(a.shape[0], b.shape[0])
+    out_bits = out_bits if out_bits is not None else n + 1
+    lane_shape = a.shape[1:]
+    carry = jnp.ones(lane_shape, _PLANE_DTYPE)
+    out = []
+    for i in range(out_bits):
+        ai = _plane(a, i, lane_shape, a)
+        bi = _plane(b, i, lane_shape, b) ^ 1
+        s, carry = _full_adder(ai, bi, carry)
+        out.append(s)
+    return jnp.stack(out), add_cycles(n)
+
+
+def bitserial_multiply(a: jax.Array, b: jax.Array):
+    """Element-wise product via tag-predicated shifted adds (§III-C).
+
+    ``a`` is the multiplicand, ``b`` the multiplier; product has
+    ``a_bits + b_bits`` planes.  Cycle count is the paper's n^2+5n-2 with
+    n = max(a_bits, b_bits).
+    """
+    na, nb = a.shape[0], b.shape[0]
+    lane_shape = a.shape[1:]
+    prod = [jnp.zeros(lane_shape, _PLANE_DTYPE) for _ in range(na + nb)]
+    for j in range(nb):
+        tag = b[j]  # load multiplier bit into the tag latch
+        carry = jnp.zeros(lane_shape, _PLANE_DTYPE)
+        for i in range(na):
+            s, carry = _full_adder(prod[j + i], a[i], carry)
+            prod[j + i] = jnp.where(tag.astype(bool), s, prod[j + i])
+        # carry lands on a fresh (still-zero under this tag) plane
+        prod[j + na] = jnp.where(tag.astype(bool), carry, prod[j + na])
+    n = max(na, nb)
+    return jnp.stack(prod), mul_cycles(n)
+
+
+def bitserial_mac(acc: jax.Array, a: jax.Array, b: jax.Array):
+    """acc += a * b.  Returns (planes, cycles) with acc width preserved."""
+    prod, c_mul = bitserial_multiply(a, b)
+    out, c_add = bitserial_add(acc, prod, out_bits=acc.shape[0])
+    return out, c_mul + c_add
+
+
+def bitserial_reduce(planes: jax.Array, out_bits: int | None = None):
+    """Sum across the *last* axis (bit lines) via the log-tree of §III-D.
+
+    Each step moves the top half of the lanes under the bottom half and adds
+    with one extra bit of width.  Returns (planes, cycles) with lane axis
+    reduced to 1.
+    """
+    k = planes.shape[-1]
+    width = planes.shape[0]
+    cycles = 0
+    cur = planes
+    while cur.shape[-1] > 1:
+        m = cur.shape[-1]
+        half = (m + 1) // 2
+        lo = cur[..., :half]
+        hi = cur[..., half:]
+        if hi.shape[-1] < half:  # pad odd lane counts with zero lines
+            pad = [(0, 0)] * (hi.ndim - 1) + [(0, half - hi.shape[-1])]
+            hi = jnp.pad(hi, pad)
+        w = cur.shape[0]
+        cur, _ = bitserial_add(lo, hi, out_bits=w + 1)
+        cycles += move_cycles(w) + add_cycles(w)
+    if out_bits is not None:
+        cur = _resize_planes(cur, out_bits)
+    # sanity: cycle formula matches the closed form
+    assert cycles == reduce_cycles(k, width), (cycles, reduce_cycles(k, width))
+    return cur, cycles
+
+
+def _resize_planes(planes: jax.Array, n: int) -> jax.Array:
+    if planes.shape[0] == n:
+        return planes
+    if planes.shape[0] > n:
+        return planes[:n]
+    pad = [(0, n - planes.shape[0])] + [(0, 0)] * (planes.ndim - 1)
+    return jnp.pad(planes, pad)
+
+
+# ---------------------------------------------------------------------------
+# Predicated ops (tag-latch) — ReLU / max / selective copy (§IV-D).
+# ---------------------------------------------------------------------------
+def selective_copy(dst: jax.Array, src: jax.Array, mask: jax.Array):
+    """Copy ``src`` planes over ``dst`` where ``mask`` (per bit line) is 1.
+
+    Cycles: one per bit (tag-enabled write-back), plus 1 to load the tag.
+    """
+    n = max(dst.shape[0], src.shape[0])
+    src = _resize_planes(src, dst.shape[0])
+    out = jnp.where(mask.astype(bool)[None, ...], src, dst)
+    return out, n + 1
+
+
+def bitserial_relu(x: jax.Array):
+    """Two's-complement ReLU: zero lanes whose sign plane is set (§IV-D)."""
+    sign = x[-1]
+    zero = jnp.zeros_like(x)
+    out, cyc = selective_copy(x, zero, sign)
+    return out, cyc
+
+
+def bitserial_max(a: jax.Array, b: jax.Array):
+    """Element-wise max of two unsigned plane tensors via subtract + masked
+    copy (§IV-D max pooling)."""
+    diff, c_sub = bitserial_sub(a, b)
+    a_lt_b = diff[-1]  # sign of a-b
+    out, c_cp = selective_copy(a, b, a_lt_b)
+    return out, c_sub + c_cp
+
+
+# ---------------------------------------------------------------------------
+# Convenience: quantized dot product exactly as an array column computes it.
+# ---------------------------------------------------------------------------
+def bitserial_dot(x: jax.Array, w: jax.Array, n_bits: int = 8, acc_bits: int = 24):
+    """Per-lane dot product: lanes hold channels, reduce at the end.
+
+    ``x``/``w``: unsigned integer tensors of shape [..., K].  Emulates the
+    paper's conv inner loop: K tag-predicated MACs into a ``acc_bits``-wide
+    partial sum per lane, then a log-tree reduction over lanes.
+    Returns (value, cycles) — value is the exact integer dot product.
+    """
+    xp = bitplane_pack(x, n_bits)
+    wp = bitplane_pack(w, n_bits)
+    acc = jnp.zeros((acc_bits,) + x.shape, _PLANE_DTYPE)
+    cycles = 0
+    acc, c = bitserial_mac(acc, xp, wp)
+    cycles += c
+    red, c = bitserial_reduce(acc)
+    cycles += c
+    return bitplane_unpack(red)[..., 0], cycles
+
+
+@dataclasses.dataclass
+class OpCycles:
+    """Cycle-cost card for one 8-bit MAC pipeline, used by the simulator.
+
+    ``mac8`` is the paper's measured per-MAC constant (236 cycles for layer
+    Conv2D_2b: includes multiply, accumulate into the 24-bit partial sum, tag
+    loads and scratch moves).  First-principles floor is mul(8)+add(24) = 127;
+    the remainder is per-MAC orchestration overhead, which we keep as a
+    calibrated constant so the simulator reproduces the paper's tables.
+    """
+
+    bits: int = 8
+    acc_bits: int = 24
+    mac8: int = 236
+
+    @property
+    def mac_floor(self) -> int:
+        return mul_cycles(self.bits) + add_cycles(self.acc_bits)
+
+    @property
+    def mac_overhead(self) -> int:
+        return self.mac8 - self.mac_floor

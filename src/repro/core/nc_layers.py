@@ -1,0 +1,127 @@
+"""Functional execution of DNN layers through the bit-serial engine.
+
+This is the *correctness* counterpart of core/simulator.py (which models
+time/energy): each layer is computed element-for-element the way the cache
+would — uint8 operands, bit-plane transposed layout, tag-predicated MACs,
+in-array log-tree channel reduction, fixed-point requantization — and is
+validated against jnp oracles in tests/test_nc_layers.py.
+
+It is intentionally written for clarity over speed (python loops over bit
+positions); use it on small shapes.  The TPU-fast path lives in repro/kernels.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitserial as bs
+from repro.core import quantize as q
+
+__all__ = ["nc_dot", "nc_conv2d", "nc_maxpool2d", "nc_relu_requant", "nc_fc"]
+
+
+def nc_dot(x_q: jax.Array, w_q: jax.Array, acc_bits: int = 24):
+    """Quantized dot products, one per bit-line group.
+
+    x_q: [..., K] uint8 inputs, w_q: [..., K] uint8 filters (same shape).
+    Each of the K lanes performs one 8-bit MAC into a 24-bit partial sum,
+    then the lanes reduce via the in-array log tree.  Returns (int values
+    [...], cycles) — bit-exact with the integer dot product.
+    """
+    xp = bs.bitplane_pack(x_q.astype(jnp.uint32), 8)
+    wp = bs.bitplane_pack(w_q.astype(jnp.uint32), 8)
+    acc = jnp.zeros((acc_bits,) + x_q.shape, jnp.uint8)
+    acc, c_mac = bs.bitserial_mac(acc, xp, wp)
+    red, c_red = bs.bitserial_reduce(acc)
+    return bs.bitplane_unpack(red)[..., 0], c_mac + c_red
+
+
+def nc_conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    x_qp: q.QuantParams,
+    w_qp: q.QuantParams,
+    stride: int = 1,
+):
+    """Quantized VALID conv through the array model.
+
+    x: [H, W, C] float, w: [R, S, C, M] float.  Both are quantized to uint8
+    (zero-point affine), the cross terms of (x-zx)(w-zw) are handled exactly
+    as the integer expansion, and the result is returned as int32 — what the
+    reserved-way staging would hold before requantization.
+    """
+    xq = q.quantize(x, x_qp).astype(jnp.int64)
+    wq = q.quantize(w, w_qp).astype(jnp.int64)
+    H, W, C = x.shape
+    R, S, Cw, M = w.shape
+    assert C == Cw
+    E = (H - R) // stride + 1
+    F = (W - S) // stride + 1
+    out = np.zeros((E, F, M), np.int64)
+    total_cycles = 0
+    for e in range(E):
+        for f in range(F):
+            win = xq[e * stride : e * stride + R, f * stride : f * stride + S]
+            # lanes = RxSxC (filter splitting across lines is a layout detail;
+            # arithmetic is identical) — all M computed by replicated lanes
+            for m in range(M):
+                val, cyc = nc_dot(
+                    win.reshape(-1).astype(jnp.uint8),
+                    wq[..., m].reshape(-1).astype(jnp.uint8),
+                    acc_bits=32,
+                )
+                total_cycles += cyc
+                # affine-zero-point correction (done by the accumulating
+                # requant step in-cache; exact integer identity)
+                sx = int(jnp.sum(win))
+                sw = int(jnp.sum(wq[..., m]))
+                k = R * S * C
+                out[e, f, m] = (
+                    int(val)
+                    - int(w_qp.zero_point) * sx
+                    - int(x_qp.zero_point) * sw
+                    + k * int(x_qp.zero_point) * int(w_qp.zero_point)
+                )
+    return jnp.asarray(out, jnp.int32), total_cycles
+
+
+def nc_maxpool2d(x_q: jax.Array, window: int, stride: int):
+    """uint8 max pooling via subtract + MSB-masked copies (§IV-D)."""
+    H, W, C = x_q.shape
+    E = (H - window) // stride + 1
+    F = (W - window) // stride + 1
+    out = np.zeros((E, F, C), np.uint8)
+    cycles = 0
+    for e in range(E):
+        for f in range(F):
+            win = x_q[e * stride : e * stride + window, f * stride : f * stride + window]
+            cur = bs.bitplane_pack(win[0, 0].astype(jnp.uint32), 8)
+            for i in range(window):
+                for j in range(window):
+                    if i == j == 0:
+                        continue
+                    nxt = bs.bitplane_pack(win[i, j].astype(jnp.uint32), 8)
+                    cur, c = bs.bitserial_max(cur, nxt)
+                    cur = cur[:8]
+                    cycles += c
+            out[e, f] = np.asarray(bs.bitplane_unpack(cur))
+    return jnp.asarray(out), cycles
+
+
+def nc_relu_requant(
+    acc: jax.Array, real_multiplier: float, out_zp: int = 0
+) -> jax.Array:
+    """ReLU on the int32 accumulator then fixed-point requant to uint8 —
+    the in-cache epilogue of every conv layer."""
+    acc = jnp.maximum(acc, 0)  # MSB-masked zero write
+    m, s = q.fixed_point_multiplier(jnp.float32(real_multiplier))
+    return q.requantize_fixedpoint(acc, m, s, zero_point=out_zp).astype(jnp.uint8)
+
+
+def nc_fc(x: jax.Array, w: jax.Array, x_qp: q.QuantParams, w_qp: q.QuantParams):
+    """FC as a 1x1 conv over a 1x1 'image' (§IV-D)."""
+    out, cycles = nc_conv2d(x[None, None, :], w[None, None, :, :], x_qp, w_qp)
+    return out[0, 0], cycles

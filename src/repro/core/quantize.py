@@ -1,0 +1,150 @@
+"""Affine quantization — the paper's in-cache 8-bit pipeline (§IV-D).
+
+Neural Cache runs all layers on unsigned 8-bit operands.  After each layer it
+(1) reduces min/max over every output element in-cache, (2) ships the two
+scalars to the CPU which computes a fixed-point multiplier + zero point, and
+(3) requantizes every element in-cache with integer multiply/add/shift.
+
+This module implements that pipeline both in float (production path) and in
+pure integer fixed-point (bit-exact with what the in-cache shifter does),
+plus per-channel weight quantization used by the TPU kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QuantParams",
+    "choose_qparams",
+    "quantize",
+    "dequantize",
+    "quantize_per_channel",
+    "requantize_fixedpoint",
+    "fixed_point_multiplier",
+    "fake_quant",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantParams:
+    """Affine (asymmetric) quantization: real = scale * (q - zero_point)."""
+
+    scale: jax.Array | float
+    zero_point: jax.Array | int
+    bits: int = 8
+    signed: bool = False
+
+    @property
+    def qmin(self) -> int:
+        return -(1 << (self.bits - 1)) if self.signed else 0
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.bits - 1)) - 1 if self.signed else (1 << self.bits) - 1
+
+
+def choose_qparams(
+    x_min: jax.Array, x_max: jax.Array, bits: int = 8, signed: bool = False
+) -> QuantParams:
+    """The paper's CPU-side scalar step: min/max -> (scale, zero_point).
+
+    Follows the TF-Lite/gemmlowp convention: the range always includes 0 so
+    that zero is exactly representable (padding / ReLU correctness).
+    """
+    x_min = jnp.minimum(x_min, 0.0)
+    x_max = jnp.maximum(x_max, 0.0)
+    qmin = -(1 << (bits - 1)) if signed else 0
+    qmax = (1 << (bits - 1)) - 1 if signed else (1 << bits) - 1
+    scale = (x_max - x_min) / (qmax - qmin)
+    scale = jnp.where(scale <= 0, 1.0, scale)
+    zp = jnp.clip(jnp.round(qmin - x_min / scale), qmin, qmax).astype(jnp.int32)
+    return QuantParams(scale=scale, zero_point=zp, bits=bits, signed=signed)
+
+
+def choose_qparams_symmetric(x_absmax: jax.Array, bits: int = 8) -> QuantParams:
+    """Symmetric signed quantization (zero_point = 0) — the W8A8 kernel
+    activation convention (the affine zero-point correction is instead a
+    weight-sum epilogue term; see repro/quant/qlinear.py)."""
+    qmax = (1 << (bits - 1)) - 1
+    scale = jnp.maximum(x_absmax, 1e-12) / qmax
+    return QuantParams(scale=scale, zero_point=0, bits=bits, signed=True)
+
+
+def quantize(x: jax.Array, qp: QuantParams) -> jax.Array:
+    q = jnp.round(x / qp.scale) + qp.zero_point
+    q = jnp.clip(q, qp.qmin, qp.qmax)
+    return q.astype(jnp.int8 if qp.signed else jnp.uint8)
+
+
+def dequantize(q: jax.Array, qp: QuantParams) -> jax.Array:
+    return (q.astype(jnp.float32) - qp.zero_point) * qp.scale
+
+
+def fake_quant(x: jax.Array, bits: int = 8, signed: bool = False) -> jax.Array:
+    """Quantize-dequantize roundtrip (per-tensor, dynamic min/max)."""
+    qp = choose_qparams(jnp.min(x), jnp.max(x), bits=bits, signed=signed)
+    return dequantize(quantize(x, qp), qp)
+
+
+def quantize_per_channel(w: jax.Array, axis: int = -1, bits: int = 8):
+    """Symmetric per-channel weight quantization (TPU kernel path).
+
+    Returns (int8 weights, float32 scales broadcastable against ``w``).
+    """
+    amax = jnp.max(jnp.abs(w), axis=tuple(i for i in range(w.ndim) if i != axis % w.ndim), keepdims=True)
+    qmax = (1 << (bits - 1)) - 1
+    scale = jnp.where(amax > 0, amax / qmax, 1.0)
+    q = jnp.clip(jnp.round(w / scale), -qmax - 1, qmax).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Integer-only requantization — what the in-cache shifter actually executes.
+# ---------------------------------------------------------------------------
+def fixed_point_multiplier(real_multiplier: jax.Array, bits: int = 31):
+    """Decompose a positive real multiplier < 1 into (int32 mantissa, right shift).
+
+    gemmlowp's ``QuantizeMultiplierSmallerThanOne``: real = m * 2^-s with
+    m in [2^30, 2^31).  These two integers are the "two unsigned integers
+    sent back by the CPU" in §IV-D.
+    """
+    real_multiplier = jnp.asarray(real_multiplier, jnp.float32)
+    # exponent such that mantissa in [0.5, 1)
+    exp = jnp.ceil(jnp.log2(real_multiplier))
+    shift = (-exp).astype(jnp.int32) + bits
+    m = jnp.round(real_multiplier * (2.0 ** shift.astype(jnp.float32)))
+    m = jnp.clip(m, 0, (1 << bits) - 1).astype(jnp.int64)
+    return m, shift
+
+
+def requantize_fixedpoint(
+    acc: jax.Array,
+    multiplier: jax.Array,
+    shift: jax.Array,
+    zero_point: jax.Array | int = 0,
+    qmin: int = 0,
+    qmax: int = 255,
+) -> jax.Array:
+    """int32 accumulator -> n-bit output using integer multiply + round-shift.
+
+    Bit-exact with the in-cache multiply/add/shift sequence (§IV-D) and with
+    gemmlowp's rounding-doubling-free variant: out = (acc * m + 2^(s-1)) >> s.
+    """
+    acc = acc.astype(jnp.int64)
+    m = multiplier.astype(jnp.int64)
+    s = shift.astype(jnp.int64)
+    rounded = (acc * m + (jnp.int64(1) << (s - 1))) >> s
+    out = rounded + zero_point
+    return jnp.clip(out, qmin, qmax).astype(jnp.int32)
+
+
+def requantize_reference(
+    acc: jax.Array, real_multiplier: jax.Array, zero_point=0, qmin=0, qmax=255
+) -> jax.Array:
+    """Float reference for :func:`requantize_fixedpoint` (tests only)."""
+    out = jnp.round(acc.astype(jnp.float32) * real_multiplier) + zero_point
+    return jnp.clip(out, qmin, qmax).astype(jnp.int32)

@@ -1,0 +1,282 @@
+"""Neural Cache cycle/energy/data-movement simulator (paper §V-§VI).
+
+Deterministic performance model with two ingredient classes:
+
+MECHANISTIC (derived, no fitting):
+  * the mapping model (core/mapper.py) — filters/array, parallel convs,
+    serial passes; validated against the paper's two worked examples,
+  * per-conv compute cycles: ``mac8 * macs_per_line + red_step * log2(C')``
+    — reproduces the paper's 2784 cycles/conv for Conv2d_2b exactly,
+  * byte counts for filters / inputs / outputs from layer geometry,
+  * batching model: filters loaded once per layer per batch; outputs of
+    early layers spill to DRAM when the batch outgrows the reserved way.
+
+CALIBRATED (constants the paper itself measured with micro-benchmarks and
+SPICE, §V — we adopt their published values):
+  * mac8 = 236 cycles per 8-bit MAC (§VI-A; first-principles floor is
+    mul(8)+add(24) = 127, the rest is tag-load/move orchestration),
+  * red_step = 132 cycles per reduction step (660 cycles / 5 steps at C'=32:
+    4-byte-segment move+add ~ 97 cycles + 35 measured overhead),
+  * effective bandwidths for filter loading (DRAM + ring/bus distribution),
+    input streaming and output staging, set from the paper's measured
+    latency breakdown (Figure 14) once, then reused for every experiment
+    (including the cache-capacity scaling runs of Table IV).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Sequence
+
+from repro.core import bitserial as bs
+from repro.core.cache_geometry import CacheGeometry, XEON_E5_35MB
+from repro.core.mapper import LayerSpec, MappedLayer, map_layer
+
+__all__ = ["SimConstants", "LayerResult", "NetworkResult", "simulate_layer",
+           "simulate_network", "throughput", "PAPER"]
+
+MIB = 1 << 20
+
+
+# Published baseline / headline numbers we validate against (paper §VI).
+PAPER = dict(
+    nc_latency_ms=4.72,
+    cpu_latency_ms=86.4,  # 18.3x
+    gpu_latency_ms=36.3,  # 7.7x
+    latency_speedup_cpu=18.3,
+    latency_speedup_gpu=7.7,
+    nc_throughput=604.0,  # dual-socket node, max batch
+    cpu_throughput=48.7,  # 604 / 12.4
+    gpu_throughput=274.5,  # 604 / 2.2
+    nc_energy_j=0.246,
+    cpu_energy_j=9.137,
+    gpu_energy_j=4.087,
+    nc_power_w=52.92,
+    cpu_power_w=105.56,
+    gpu_power_w=112.87,
+    breakdown=dict(filter=0.46, input=0.15, output=0.04, mac=0.20,
+                   reduce=0.10, quant=0.05, pool=0.0004),
+    capacity_ms={35: 4.72, 45: 4.12, 60: 3.79},
+    conv2d_2b_cycles_per_conv=2784,
+    conv2d_2b_serial=43,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConstants:
+    """Calibrated constants (see module docstring for provenance)."""
+
+    mac8_cycles: int = 236
+    reduce_step_cycles: int = 132
+    reduce_xstep_cycles: int = 111  # extra per step beyond 5: moves cross the
+    #   sense-amp pair boundary once partial sums span >32 lines
+    pass_stage_cycles: int = 453  # per serial pass: stage the next window's
+    #   input bytes into word lines + move finished outputs out (folded into
+    #   the paper's 'MACs' share of Figure 14)
+    pool_cmp_cycles: int = 27  # sub(8) + masked copy + tag load
+    quant_pass_cycles: int = 3546  # 3 x 32-bit fixed-point multiplies (BN + requant)
+    quant_layer_overhead_cycles: int = 2500  # min/max tree + bus reduction
+    # effective bandwidths (bytes/s) — measured by the paper's micro-benchmarks
+    filter_bw: float = 10.96e9  # DRAM read + ring/bus broadcast + array stores
+    input_bw: float = 51.5e9  # reserved-way reads + intra-slice broadcast
+    output_bw: float = 61.8e9  # compute arrays -> reserved way
+    dram_bw: float = 11.0e9  # batched-output spill/reload
+    # energy model
+    dram_pj_per_byte: float = 20.0
+    bus_pj_per_byte: float = 5.0
+
+    def scaled_bandwidths(self, geom: CacheGeometry, base: CacheGeometry):
+        """Input/output movement parallelizes over slices (§VI-D); filter
+        loading is DRAM-bound and does not (filters are replicated)."""
+        r = geom.n_slices / base.n_slices
+        return dataclasses.replace(self, input_bw=self.input_bw * r,
+                                   output_bw=self.output_bw * r)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerResult:
+    spec: LayerSpec
+    mapped: MappedLayer
+    mac_s: float
+    reduce_s: float
+    quant_s: float
+    pool_s: float
+    filter_s: float
+    input_s: float
+    output_s: float
+    compute_cycles_per_pass: float
+    energy_j: float
+
+    @property
+    def compute_s(self) -> float:
+        return self.mac_s + self.reduce_s + self.quant_s + self.pool_s
+
+    @property
+    def total_s(self) -> float:
+        return self.compute_s + self.filter_s + self.input_s + self.output_s
+
+
+def _fresh_input_fraction(spec: LayerSpec) -> float:
+    """Input-reuse model (§IV-A): for an RxS window with stride U, (R-U)xS of
+    the RxS bytes are reused across consecutive output pixels held in-array
+    (e.g. 6 of 9 for 3x3 stride 1)."""
+    if spec.filter_elems <= 1:
+        return 1.0
+    reuse = max(spec.R - spec.stride, 0) / spec.R
+    return 1.0 - reuse
+
+
+def simulate_layer(
+    spec: LayerSpec,
+    geom: CacheGeometry = XEON_E5_35MB,
+    const: SimConstants = SimConstants(),
+) -> LayerResult:
+    m = map_layer(spec, geom)
+    f_hz = geom.compute_freq_hz
+
+    if spec.kind in ("maxpool", "avgpool"):
+        # window_size-1 comparisons per window, all lanes in lockstep
+        cmps = max(spec.filter_elems - 1, 1)
+        pass_cycles = cmps * const.pool_cmp_cycles
+        if spec.kind == "avgpool":
+            pass_cycles = spec.filter_elems * bs.add_cycles(16) + bs.div_cycles(8)
+        pool_s = m.serial_passes * pass_cycles / f_hz
+        input_s = spec.window_count * spec.filter_elems * _fresh_input_fraction(spec) / const.input_bw
+        output_s = spec.output_bytes / const.output_bw
+        energy = (
+            m.serial_passes * pass_cycles * geom.compute_arrays * m.utilization
+            * geom.compute_energy_pj * 1e-12
+        )
+        return LayerResult(spec, m, 0.0, 0.0, 0.0, pool_s, 0.0, input_s,
+                           output_s, pass_cycles, energy)
+
+    # ---- convolution / fc -------------------------------------------------
+    mac_cycles = const.mac8_cycles * m.macs_per_line
+    steps = m.reduction_steps
+    red_cycles = const.reduce_step_cycles * steps + const.reduce_xstep_cycles * max(steps - 5, 0)
+    per_conv = mac_cycles + red_cycles
+
+    mac_s = m.serial_passes * (mac_cycles + const.pass_stage_cycles) / f_hz
+    reduce_s = m.serial_passes * red_cycles / f_hz
+
+    # requantization (+folded BN) applies to output elements in lockstep
+    # across lanes: once per lane-full of outputs, plus the per-layer
+    # min/max tree + inter-array bus reduction (§IV-D).
+    lanes = geom.compute_slots
+    quant_passes = math.ceil(spec.output_bytes / lanes)
+    quant_s = (quant_passes * const.quant_pass_cycles
+               + const.quant_layer_overhead_cycles) / f_hz
+
+    filter_bytes = spec.filter_bytes
+    filter_s = filter_bytes / const.filter_bw
+    input_stream = spec.conv_count * spec.filter_elems * _fresh_input_fraction(spec)
+    input_s = input_stream / const.input_bw
+    output_s = spec.output_bytes / const.output_bw
+
+    compute_cycles = m.serial_passes * (per_conv + const.pass_stage_cycles) + quant_s * f_hz
+    active = geom.compute_arrays * m.utilization
+    energy = (
+        compute_cycles * active * geom.compute_energy_pj * 1e-12
+        + filter_bytes * (const.dram_pj_per_byte + const.bus_pj_per_byte) * 1e-12
+        + (input_stream + spec.output_bytes) * const.bus_pj_per_byte * 1e-12
+    )
+    return LayerResult(spec, m, mac_s, reduce_s, quant_s, 0.0, filter_s,
+                       input_s, output_s, per_conv, energy)
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkResult:
+    layers: tuple[LayerResult, ...]
+    geom: CacheGeometry
+    const: SimConstants
+
+    @property
+    def filter_s(self) -> float:
+        return sum(l.filter_s for l in self.layers)
+
+    @property
+    def input_s(self) -> float:
+        return sum(l.input_s for l in self.layers)
+
+    @property
+    def output_s(self) -> float:
+        return sum(l.output_s for l in self.layers)
+
+    @property
+    def mac_s(self) -> float:
+        return sum(l.mac_s for l in self.layers)
+
+    @property
+    def reduce_s(self) -> float:
+        return sum(l.reduce_s for l in self.layers)
+
+    @property
+    def quant_s(self) -> float:
+        return sum(l.quant_s for l in self.layers)
+
+    @property
+    def pool_s(self) -> float:
+        return sum(l.pool_s for l in self.layers)
+
+    @property
+    def compute_s(self) -> float:
+        return self.mac_s + self.reduce_s + self.quant_s + self.pool_s
+
+    @property
+    def marginal_s(self) -> float:
+        """Per-image time with filters resident (batched steady state)."""
+        return self.compute_s + self.input_s + self.output_s
+
+    @property
+    def latency_s(self) -> float:
+        return self.filter_s + self.marginal_s
+
+    @property
+    def energy_j(self) -> float:
+        return sum(l.energy_j for l in self.layers)
+
+    @property
+    def power_w(self) -> float:
+        return self.energy_j / self.latency_s
+
+    def breakdown(self) -> dict[str, float]:
+        t = self.latency_s
+        return dict(
+            filter=self.filter_s / t, input=self.input_s / t,
+            output=self.output_s / t, mac=self.mac_s / t,
+            reduce=self.reduce_s / t, quant=self.quant_s / t,
+            pool=self.pool_s / t,
+        )
+
+    def spill_s_per_image(self) -> float:
+        """Batched mode: a layer's batch-wide output set must stay resident
+        until the next layer consumes it; when it exceeds the reserved way it
+        round-trips DRAM (§IV-E: 'the first five [layers]' for Inception v3)."""
+        cap = self.geom.io_way_bytes / 2  # staging holds inputs + outputs
+        spill = 0.0
+        for l in self.layers:
+            if l.spec.output_bytes > cap / 2:  # per-image; batch >= 2 overflows
+                spill += 2 * l.spec.output_bytes  # dump + reload
+        return spill / self.const.dram_bw
+
+
+def simulate_network(
+    specs: Sequence[LayerSpec],
+    geom: CacheGeometry = XEON_E5_35MB,
+    const: SimConstants = SimConstants(),
+    base_geom: CacheGeometry = XEON_E5_35MB,
+) -> NetworkResult:
+    const = const.scaled_bandwidths(geom, base_geom)
+    return NetworkResult(tuple(simulate_layer(s, geom, const) for s in specs),
+                         geom, const)
+
+
+def throughput(result: NetworkResult, batch: int, sockets: int = 2) -> float:
+    """Inferences/s for a batch processed layer-serially (§IV-E).
+
+    total(N) = filter_load + N * marginal + N * spill  (spill only when the
+    batch outgrows the reserved way, i.e. N >= 2).
+    """
+    spill = result.spill_s_per_image() if batch > 1 else 0.0
+    total = result.filter_s + batch * (result.marginal_s + spill)
+    return sockets * batch / total

@@ -1,0 +1,9 @@
+from repro.distributed.sharding import (
+    make_param_shardings,
+    make_batch_sharding,
+    make_cache_shardings,
+    spec_for_param,
+    ShardingReport,
+)
+from repro.distributed.hlo_analysis import collective_bytes, CollectiveStats
+from repro.distributed.roofline import roofline, RooflineReport, TPU_V5E

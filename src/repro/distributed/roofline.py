@@ -1,0 +1,128 @@
+"""Three-term roofline model from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes / (chips x HBM_bw)
+    collective term = collective_bytes / (chips x link_bw)
+
+``compiled.cost_analysis()`` on the host backend reports *per-device*
+flops/bytes (the SPMD-partitioned program), so we form each term as
+per-device quantity / per-chip rate — algebraically identical to the
+formulas above with chips multiplied through both numerator and
+denominator.  Hardware constants are TPU v5e.
+
+MODEL_FLOPS uses the standard 6*N*D training rule (N = params, D = tokens;
+forward-only steps use 2*N*D) with N = active params for MoE.  The ratio
+MODEL_FLOPS / HLO_FLOPs measures how much compiled compute is useful —
+remat recompute, dispatch einsums and attention (not counted in 6ND) push
+it below 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed.hlo_analysis import CollectiveStats
+
+__all__ = ["HardwareSpec", "TPU_V5E", "RooflineReport", "roofline",
+           "model_flops"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops: float        # per chip, bf16
+    hbm_bw: float            # bytes/s per chip
+    ici_bw: float            # bytes/s per link
+    hbm_bytes: float         # capacity per chip
+
+
+TPU_V5E = HardwareSpec(
+    name="tpu-v5e",
+    peak_flops=197e12,
+    hbm_bw=819e9,
+    ici_bw=50e9,
+    hbm_bytes=16e9,
+)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """6*N_active*D for train, 2*N_active*D for forward-only steps.
+
+    Decode steps process one token per sequence (D = global_batch).
+    """
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one new token per seq
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # raw (per-device) measurements
+    hlo_flops_per_device: float
+    hlo_bytes_per_device: float
+    collective_wire_bytes_per_device: float
+    # the three terms, in seconds
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    model_flops_total: float
+    useful_flops_ratio: float
+    peak_memory_per_device: float | None = None
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the step that is the compute term — how close the
+        step is to being MXU-bound (1.0 = perfectly compute-limited)."""
+        t = self.bound_time
+        return self.t_compute / t if t > 0 else 0.0
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["bound_time_s"] = self.bound_time
+        d["roofline_fraction"] = self.roofline_fraction
+        return d
+
+
+def roofline(arch: str, shape: str, mesh_name: str, chips: int,
+             cost: dict, coll: CollectiveStats, cfg: ModelConfig,
+             spec: ShapeSpec, hw: HardwareSpec = TPU_V5E,
+             peak_memory: float | None = None) -> RooflineReport:
+    flops = float(cost.get("flops", 0.0))
+    nbytes = float(cost.get("bytes accessed", 0.0))
+    cbytes = float(coll.total_wire_bytes)
+
+    t_c = flops / hw.peak_flops
+    t_m = nbytes / hw.hbm_bw
+    t_n = cbytes / hw.ici_bw
+
+    dominant = max(
+        (("compute", t_c), ("memory", t_m), ("collective", t_n)),
+        key=lambda kv: kv[1],
+    )[0]
+    mf = model_flops(cfg, spec)
+    ratio = mf / (flops * chips) if flops > 0 else 0.0
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops_per_device=flops,
+        hlo_bytes_per_device=nbytes,
+        collective_wire_bytes_per_device=cbytes,
+        t_compute=t_c, t_memory=t_m, t_collective=t_n,
+        dominant=dominant,
+        model_flops_total=mf,
+        useful_flops_ratio=ratio,
+        peak_memory_per_device=peak_memory,
+    )

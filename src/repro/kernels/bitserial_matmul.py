@@ -1,0 +1,122 @@
+"""Bit-serial GEMM Pallas kernel — the paper's compute model on the MXU.
+
+The SRAM array processes one *bit* of every lane per cycle; the TPU analogue
+processes one *bit-plane* of the weight tensor per MXU pass:
+
+    out = sum_b  w_b * (x @ plane_b),   w_b = 2^b (MSB plane: -2^(n-1))
+
+Properties carried over from the paper:
+  * latency proportional to weight precision (planes are a static unroll:
+    4-bit weights cost half the MXU passes of 8-bit),
+  * transposed layout: planes are precomputed once at weight-load time
+    (ref.pack_bitplanes == the TMU gateway),
+  * beyond-paper: *zero-plane skipping* — a per-(plane, K-block, N-block)
+    occupancy mask is computed at pack time and all-zero plane-blocks are
+    predicated off with @pl.when, exploiting bit-level sparsity the SRAM
+    substrate cannot (it must clock every bit-slice).
+
+Grid: (M/bm, N/bn, K/bk) with K innermost; planes of one (bk, bn) tile are
+looped inside the kernel body (static python loop -> fully unrolled MXU
+passes over VMEM-resident tiles).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import pack_bitplanes, plane_weights
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 256
+
+
+def _kernel(x_ref, p_ref, mask_ref, xs_ref, ws_ref, o_ref, acc_ref, *, n_k: int,
+            n_bits: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pw = plane_weights(n_bits)
+    for b in range(n_bits):  # bit-serial: one plane per MXU pass
+        @pl.when(mask_ref[b, 0, 0] != 0)  # zero-plane skip (beyond-paper)
+        def _plane(b=b):
+            part = jnp.dot(
+                x_ref[...].astype(jnp.int32),
+                p_ref[b].astype(jnp.int32),
+                preferred_element_type=jnp.int32,
+            )
+            acc_ref[...] += pw[b] * part
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        out = acc_ref[...].astype(jnp.float32)
+        out = out * xs_ref[0] * ws_ref[...][None, :]
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+def plane_block_mask(planes: jax.Array, bk: int, bn: int) -> jax.Array:
+    """[n_bits, K/bk, N/bn] int8 occupancy of each plane tile (pack time)."""
+    n_bits, K, N = planes.shape
+    p = planes.reshape(n_bits, K // bk, bk, N // bn, bn)
+    return (p.sum(axis=(2, 4)) > 0).astype(jnp.int8)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "out_dtype", "interpret")
+)
+def bitserial_matmul(
+    x_q: jax.Array,  # [M, K] int8 activations
+    planes: jax.Array,  # [n_bits, K, N] {0,1} int8 (pack_bitplanes)
+    x_scale: jax.Array,  # scalar f32
+    w_scale: jax.Array,  # [N] f32
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    out_dtype=jnp.float32,
+    interpret: bool = True,
+) -> jax.Array:
+    n_bits, K, N = planes.shape
+    M = x_q.shape[0]
+    assert x_q.shape[1] == K
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+
+    pad_m, pad_n, pad_k = (-M) % bm, (-N) % bn, (-K) % bk
+    if pad_m or pad_k:
+        x_q = jnp.pad(x_q, ((0, pad_m), (0, pad_k)))
+    if pad_k or pad_n:
+        planes = jnp.pad(planes, ((0, 0), (0, pad_k), (0, pad_n)))
+    w_scale = jnp.broadcast_to(jnp.asarray(w_scale, jnp.float32), (N,))
+    if pad_n:
+        w_scale = jnp.pad(w_scale, (0, pad_n))
+    x_scale = jnp.reshape(jnp.asarray(x_scale, jnp.float32), (1,))
+
+    Mp, Kp = x_q.shape
+    Np = planes.shape[2]
+    n_k = Kp // bk
+    grid = (Mp // bm, Np // bn, n_k)
+    mask = plane_block_mask(planes, bk, bn)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k, n_bits=n_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
+            pl.BlockSpec((n_bits, bk, bn), lambda m, n, k: (0, k, n)),
+            pl.BlockSpec((n_bits, 1, 1), lambda m, n, k: (0, k, n)),
+            pl.BlockSpec((1,), lambda m, n, k: (0,)),
+            pl.BlockSpec((bn,), lambda m, n, k: (n,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_q, planes, mask, x_scale, w_scale)
+    return out[:M, :N]

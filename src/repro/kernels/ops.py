@@ -1,0 +1,68 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``use_pallas`` policy: on TPU backends the compiled kernels run natively;
+elsewhere (this CPU container) they run in interpret mode for correctness,
+and callers that are on the hot path (models, serving) use the XLA fallback
+(`*_xla`) which lowers to plain dot — numerically identical, fast on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bitserial_matmul import bitserial_matmul as _bitserial_pallas
+from repro.kernels.quant_matmul import quant_matmul as _quant_pallas
+
+__all__ = [
+    "on_tpu",
+    "quant_matmul",
+    "bitserial_matmul",
+    "pack_weights",
+    "quant_matmul_xla",
+    "flash_attention",
+]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pack_weights(w_q: jax.Array, n_bits: int = 8) -> jax.Array:
+    """Weight-load-time transpose to bit-plane layout (the TMU step)."""
+    return ref.pack_bitplanes(w_q, n_bits)
+
+
+@functools.partial(jax.jit, static_argnames=("prefer_pallas",))
+def quant_matmul(x_q, w_q, x_scale, w_scale, bias=None, *, prefer_pallas: bool = False):
+    """W8A8 GEMM with fused dequant epilogue."""
+    if prefer_pallas or on_tpu():
+        return _quant_pallas(x_q, w_q, x_scale, w_scale, bias,
+                             interpret=not on_tpu())
+    return ref.quant_matmul_ref(x_q, w_q, x_scale, w_scale, bias)
+
+
+quant_matmul_xla = jax.jit(ref.quant_matmul_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "prefer_pallas"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    prefer_pallas: bool = False):
+    """Tiled attention: Pallas kernel on TPU (VMEM online softmax), the
+    naive oracle elsewhere (models/layers.py keeps its own scan-based
+    fallback for the banded/cached paths)."""
+    from repro.kernels.flash_attention import flash_attention as _fa
+    if prefer_pallas or on_tpu():
+        return _fa(q, k, v, causal=causal, interpret=not on_tpu())
+    return ref.flash_attention_ref(q, k, v, causal=causal)
+
+
+@functools.partial(jax.jit, static_argnames=("prefer_pallas",))
+def bitserial_matmul(x_q, planes, x_scale, w_scale, *, prefer_pallas: bool = False):
+    """Bit-serial (plane-decomposed) GEMM; cost scales with planes.shape[0]."""
+    if prefer_pallas or on_tpu():
+        return _bitserial_pallas(x_q, planes, x_scale, w_scale,
+                                 interpret=not on_tpu())
+    return ref.bitserial_matmul_ref(x_q, planes, x_scale, w_scale)

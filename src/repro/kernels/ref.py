@@ -1,0 +1,105 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``*_ref`` is the mathematical definition the kernel must match —
+tests/test_kernels.py sweeps shapes/dtypes and asserts allclose (exact for
+integer paths).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "quant_matmul_ref",
+    "pack_bitplanes",
+    "bitserial_matmul_ref",
+    "flash_attention_ref",
+]
+
+
+def quant_matmul_ref(
+    x_q: jax.Array,  # [M, K] int8
+    w_q: jax.Array,  # [K, N] int8
+    x_scale: jax.Array | float = 1.0,  # scalar
+    w_scale: jax.Array | None = None,  # [N] or scalar
+    bias: jax.Array | None = None,  # [N] f32
+) -> jax.Array:
+    """W8A8 GEMM: int32 accumulate, per-channel dequant epilogue -> f32."""
+    acc = jnp.dot(
+        x_q.astype(jnp.int32), w_q.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    out = acc.astype(jnp.float32) * jnp.asarray(x_scale, jnp.float32)
+    if w_scale is not None:
+        out = out * jnp.asarray(w_scale, jnp.float32)[None, :]
+    if bias is not None:
+        out = out + bias[None, :]
+    return out
+
+
+def pack_bitplanes(w_q: jax.Array, n_bits: int = 8) -> jax.Array:
+    """int8 weights -> [n_bits, K, N] {0,1} planes, two's complement
+    (MSB plane carries weight -2^(n-1)).  The TPU analogue of the paper's
+    transposed (bit-line) layout: serial over planes, parallel over the tile.
+    """
+    w = w_q.astype(jnp.int32) & ((1 << n_bits) - 1)
+    shifts = jnp.arange(n_bits, dtype=jnp.int32).reshape((n_bits,) + (1,) * w_q.ndim)
+    return ((w[None] >> shifts) & 1).astype(jnp.int8)
+
+
+def plane_weights(n_bits: int) -> jax.Array:
+    """Per-plane scale: [1, 2, 4, ..., -2^(n-1)] (two's complement)."""
+    w = 2 ** jnp.arange(n_bits, dtype=jnp.int32)
+    return w.at[n_bits - 1].set(-(2 ** (n_bits - 1)))
+
+
+def bitserial_matmul_ref(
+    x_q: jax.Array,  # [M, K] int8 activations
+    planes: jax.Array,  # [n_bits, K, N] {0,1} int8
+    x_scale: jax.Array | float = 1.0,
+    w_scale: jax.Array | None = None,  # [N] or scalar
+) -> jax.Array:
+    """Bit-serial GEMM: out = sum_b weight_b * (x @ plane_b), dequantized.
+
+    Bit-exact with quant_matmul_ref when planes = pack_bitplanes(w_q).
+    """
+    n_bits = planes.shape[0]
+    pw = plane_weights(n_bits)
+    acc = jnp.zeros((x_q.shape[0], planes.shape[2]), jnp.int32)
+    for b in range(n_bits):
+        part = jnp.dot(
+            x_q.astype(jnp.int32), planes[b].astype(jnp.int32),
+            preferred_element_type=jnp.int32,
+        )
+        acc = acc + pw[b] * part
+    out = acc.astype(jnp.float32) * jnp.asarray(x_scale, jnp.float32)
+    if w_scale is not None:
+        out = out * jnp.asarray(w_scale, jnp.float32)[None, :]
+    return out
+
+
+def flash_attention_ref(
+    q: jax.Array,  # [B, H, Tq, D]
+    k: jax.Array,  # [B, Hkv, Tk, D]
+    v: jax.Array,  # [B, Hkv, Tk, D]
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """GQA attention oracle (naive, materializes scores)."""
+    B, H, Tq, D = q.shape
+    Hkv = k.shape[1]
+    groups = H // Hkv
+    qg = q.reshape(B, Hkv, groups, Tq, D)
+    scores = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k) / jnp.sqrt(D).astype(q.dtype)
+    qpos = jnp.arange(Tq)[:, None] + q_offset
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((Tq, k.shape[2]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v)
+    return out.reshape(B, H, Tq, D)

@@ -1,0 +1,161 @@
+"""Generate the §Dry-run and §Roofline sections of EXPERIMENTS.md from the
+dry-run JSONs.
+
+    python -m repro.launch.report [--results results/dryrun]
+                                  [--out EXPERIMENTS.md]
+
+EXPERIMENTS.md keeps hand-written sections; everything between
+<!-- BEGIN AUTOGEN --> and <!-- END AUTOGEN --> is replaced.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+MARK_BEGIN = "<!-- BEGIN AUTOGEN (repro.launch.report) -->"
+MARK_END = "<!-- END AUTOGEN -->"
+
+_ADVICE = {
+    "compute": "compute-bound: raise MXU utilization (larger per-chip tiles,"
+               " fewer remat recomputes)",
+    "memory": "HBM-bound: fuse epilogues / cut activation round-trips"
+              " (quantized weights halve the stream)",
+    "collective": "ICI-bound: overlap collectives with compute or reshard to"
+                  " cut cross-chip traffic",
+}
+
+
+def _gb(x):
+    return "-" if x is None else f"{x/1e9:.2f}"
+
+
+def load(results: pathlib.Path):
+    recs = []
+    for p in sorted(results.glob("*.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def dryrun_table(recs) -> str:
+    lines = [
+        "| arch | shape | mesh | compiles | peak GB/dev | fits 16GB | "
+        "GFLOPs/dev | HLO GB/dev | coll GB/dev (wire) | collective ops | "
+        "compile s |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if not r.get("ok"):
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | **FAIL** "
+                f"| - | - | - | - | - | {r.get('error','')[:60]} | - |")
+            continue
+        rl = r["roofline"]
+        ops = ", ".join(f"{k}x{v}" for k, v in
+                        sorted(r["collectives"]["ops"].items()))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {_gb(r['peak_bytes_per_device'])} "
+            f"| {'yes' if r['fits_hbm'] else 'NO'} "
+            f"| {rl['hlo_flops_per_device']/1e9:,.0f} "
+            f"| {rl['hlo_bytes_per_device']/1e9:,.1f} "
+            f"| {rl['collective_wire_bytes_per_device']/1e9:,.2f} "
+            f"| {ops} | {r['compile_s']} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs) -> str:
+    lines = [
+        "| arch | shape | mesh | t_compute s | t_memory s | t_collective s |"
+        " dominant | MODEL_FLOPS | useful ratio | roofline frac | next lever |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if not r.get("ok"):
+            continue
+        if r["mesh"] != "pod16x16":
+            continue  # roofline table is single-pod per the assignment
+        rl = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rl['t_compute']:.4g} | {rl['t_memory']:.4g} "
+            f"| {rl['t_collective']:.4g} | **{rl['dominant']}** "
+            f"| {rl['model_flops_total']:.3g} "
+            f"| {rl['useful_flops_ratio']:.3f} "
+            f"| {rl['roofline_fraction']:.3f} "
+            f"| {_ADVICE[rl['dominant']]} |")
+    return "\n".join(lines)
+
+
+def summary(recs) -> str:
+    ok = [r for r in recs if r.get("ok")]
+    fails = [r for r in recs if not r.get("ok")]
+    single = [r for r in ok if r["mesh"] == "pod16x16"]
+    multi = [r for r in ok if r["mesh"] != "pod16x16"]
+    fits = sum(1 for r in ok if r["fits_hbm"])
+    dom = {}
+    for r in single:
+        d = r["roofline"]["dominant"]
+        dom[d] = dom.get(d, 0) + 1
+    return (
+        f"- cells compiled: **{len(ok)}/{len(recs)}** "
+        f"({len(single)} single-pod + {len(multi)} multi-pod; "
+        f"{len(fails)} failures)\n"
+        f"- fit in 16 GB/chip HBM: {fits}/{len(ok)} "
+        f"(see notes on CPU-XLA artifacts below)\n"
+        f"- dominant roofline term (single-pod): "
+        + ", ".join(f"{k} x{v}" for k, v in sorted(dom.items())))
+
+
+def render(results_dir: str) -> str:
+    recs = load(pathlib.Path(results_dir))
+    return "\n".join([
+        MARK_BEGIN,
+        "",
+        "### Summary",
+        "",
+        summary(recs),
+        "",
+        "### §Dry-run — every (arch x shape) x both meshes",
+        "",
+        "Loop-corrected per-device numbers (`cost_analysis` charges scan"
+        " bodies once; `hlo_loop_analysis` multiplies by trip counts;"
+        " validated in tests/test_hlo_analysis.py).",
+        "",
+        dryrun_table(recs),
+        "",
+        "### §Roofline — three terms per cell (single-pod, 256 chips)",
+        "",
+        "Terms per the assignment: compute = FLOPs/(chips x 197 TF/s),"
+        " memory = bytes/(chips x 819 GB/s), collective ="
+        " wire-bytes/(chips x 50 GB/s); per-device quantities divided by"
+        " per-chip rates are the same ratio. `useful ratio` ="
+        " 6·N_active·D / total HLO FLOPs; `roofline frac` ="
+        " t_compute / max(term) (1.0 = compute-bound).",
+        "",
+        roofline_table(recs),
+        "",
+        MARK_END,
+    ])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results/dryrun")
+    ap.add_argument("--out", default="EXPERIMENTS.md")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+    block = render(args.results)
+    if out.exists() and MARK_BEGIN in out.read_text():
+        text = out.read_text()
+        pre = text.split(MARK_BEGIN)[0]
+        post = text.split(MARK_END)[-1]
+        out.write_text(pre + block + post)
+    else:
+        body = out.read_text() if out.exists() else ""
+        out.write_text(body + "\n" + block + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

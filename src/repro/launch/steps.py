@@ -1,0 +1,486 @@
+"""Step builders: jitted, sharded train / prefill / decode steps per config.
+
+These are the functions the launcher runs and the dry-run lowers.  Inputs
+come from :func:`input_specs` as ShapeDtypeStructs (weak-type-correct, no
+allocation), so ``jax.jit(...).lower(...)`` works without materializing a
+480-billion-parameter model.
+
+Shape kinds map to entry points (per the assignment):
+    train_4k    -> train_step   (loss + grads + AdamW update)
+    prefill_32k -> prefill_step (prompt pass, returns last logits + caches)
+    decode_32k / long_500k -> decode_step (one token, KV/state cache in+out)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed.sharding import (
+    ShardingReport,
+    make_batch_sharding,
+    make_cache_shardings,
+    make_param_shardings,
+)
+from repro.models import transformer as T
+from repro.optim.adamw import AdamW, MomentState, apply_updates, cosine_schedule
+
+__all__ = [
+    "input_specs", "abstract_params", "make_optimizer", "abstract_opt_state",
+    "make_train_step", "make_prefill_step", "make_decode_step",
+    "build_jitted_step", "StepBundle",
+]
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs (ShapeDtypeStruct stand-ins, no device allocation)
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, Any]:
+    """Model inputs for one (arch x shape) cell.
+
+    ``[vlm]`` archs take precomputed patch embeddings (the modality frontend
+    is a stub per the assignment); everything else takes token ids.
+    Decode kinds take a [B, 1] token and the scalar cache position; their
+    caches are produced by :func:`abstract_caches`.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        if cfg.frontend == "vision_patch":
+            return {"embeds": sds((B, S, cfg.d_model), cfg.jdtype),
+                    "labels": sds((B, S), jnp.int32)}
+        return {"tokens": sds((B, S), jnp.int32),
+                "labels": sds((B, S), jnp.int32)}
+    if shape.kind == "prefill":
+        if cfg.frontend == "vision_patch":
+            return {"embeds": sds((B, S, cfg.d_model), cfg.jdtype)}
+        return {"tokens": sds((B, S), jnp.int32)}
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": sds((B, 1), jnp.int32),
+            "pos": sds((), jnp.int32)}
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: T.init_lm(cfg, jax.random.key(0)))
+
+
+def abstract_caches(cfg: ModelConfig, shape: ShapeSpec):
+    return jax.eval_shape(
+        lambda: T.init_caches(cfg, shape.global_batch, shape.seq_len))
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+def make_optimizer(cfg: ModelConfig, *, lr: float = 3e-4, warmup: int = 200,
+                   total: int = 10_000) -> AdamW:
+    """AdamW with int8 moments for models whose f32 moments would not fit
+    16 GB/chip at 256-way sharding (the paper's 8-bit theme, applied to the
+    optimizer)."""
+    quantize = cfg.param_count() * 8 / 256 > 6e9  # m+v bytes per chip
+    return AdamW(lr=cosine_schedule(lr, warmup, total),
+                 quantize_moments=quantize)
+
+
+def abstract_opt_state(optimizer: AdamW, params):
+    return jax.eval_shape(optimizer.init, params)
+
+
+def _opt_state_shardings(optimizer: AdamW, params_sh, opt_state, mesh: Mesh):
+    """Moment shardings: mirror the param sharding; quantized moments are
+    flat int8 blocks -> shard the block axis over EVERY mesh axis that
+    divides it (the unpacked f32 working copy inherits this sharding, so it
+    must match the params' total shard count or the update step balloons)."""
+    p_leaves = jax.tree.leaves(
+        params_sh, is_leaf=lambda x: isinstance(x, NamedSharding))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def moment(ms, psh):
+        if isinstance(ms, MomentState):
+            # q is shape-preserving -> shard exactly like the param;
+            # the per-channel scale drops the last dim's sharding.
+            spec = tuple(psh.spec) + (None,) * (len(ms.q.shape)
+                                                - len(psh.spec))
+            sspec = (spec[:-1] + (None,)) if len(ms.scale.shape) else ()
+            return MomentState(
+                NamedSharding(mesh, P(*spec)),
+                NamedSharding(mesh, P(*sspec)),
+            )
+        return psh
+
+    def tup(key):
+        return tuple(moment(ms, psh)
+                     for ms, psh in zip(opt_state[key], p_leaves))
+
+    return {"m": tup("m"), "v": tup("v"),
+            "count": NamedSharding(mesh, P())}
+
+
+# ---------------------------------------------------------------------------
+# step functions (pure; closed over cfg)
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, optimizer: AdamW,
+                    n_microbatches: int = 1, grad_specs=None):
+    """Loss + grad + AdamW update.  ``n_microbatches > 1`` scans over
+    microbatches accumulating grads in f32 (sharded like the params), so the
+    live activation set shrinks by the microbatch factor at the cost of one
+    scan — standard gradient accumulation.
+
+    ``grad_specs`` (tree of PartitionSpecs matching params) constrains each
+    microbatch's gradients to the parameter sharding *inside* the scan, so
+    GSPMD folds the cross-shard reduction into a reduce-scatter against the
+    sharded accumulator instead of a full all-reduce of every dW per layer
+    per microbatch (§Perf cell B: halves the wire bytes and shrinks the
+    accumulation buffer by the shard count)."""
+
+    def loss_fn(p, mb):
+        return T.lm_loss(cfg, p, mb.get("tokens"), mb["labels"],
+                         embeds=mb.get("embeds"))
+
+    def _constrain_grads(g):
+        if grad_specs is None:
+            return g
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s),
+            g, grad_specs)
+
+    def train_step(params, opt_state, batch):
+        if n_microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((n_microbatches,
+                                     x.shape[0] // n_microbatches)
+                                    + x.shape[1:]),
+                batch)
+            g0 = _constrain_grads(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params))
+
+            def acc(carry, mb):
+                tot, g = carry
+                l, gi = jax.value_and_grad(loss_fn)(params, mb)
+                gi = _constrain_grads(gi)
+                g = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                 g, gi)
+                g = _constrain_grads(g)
+                return (tot + l, g), None
+
+            (loss, grads), _ = jax.lax.scan(acc, (jnp.float32(0), g0), mbs)
+            scale = 1.0 / n_microbatches
+            loss = loss * scale
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def default_microbatches(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                         budget_bytes: float = 2.5e9) -> int:
+    """Smallest power-of-two microbatch count whose saved-activation set
+    fits the budget.  Saved bytes/layer/local-token under the remat policy:
+      full -> d (the scan carry);  dots -> d + qkv/o projections + ff outs
+    (ff outs are model-sharded in tp mode).
+
+    The budget is deliberately conservative: XLA:CPU's float normalization
+    promotes bf16 loop-carried residual stacks to f32 (no native bf16 on
+    CPU), so the dry-run pays ~3x the bf16 activation bytes a TPU compile
+    would.  Documented in DESIGN.md §Hardware-adaptation."""
+    if shape.kind != "train":
+        return 1
+    from repro.distributed.sharding import plan_parallelism
+    mode = plan_parallelism(cfg)
+    n_batch_shards = 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axes = (("pod", "data") if mode == "tp" else ("pod", "data", "model"))
+    b = shape.global_batch
+    for a in axes:
+        n = sizes.get(a, 1)
+        if b % n == 0:
+            n_batch_shards *= n
+            b //= n
+    tok_loc = shape.global_batch * shape.seq_len / n_batch_shards
+    if (mode == "tp" and shape.seq_len % sizes.get("model", 1) == 0):
+        tok_loc /= sizes.get("model", 1)  # sequence parallelism (see _act_spec)
+    d = cfg.d_model
+    policy = "full" if cfg.param_count() > 10e9 else "dots"
+    if policy == "full":
+        per_tok = d
+    else:
+        ff_eff = (cfg.d_ff // sizes.get("model", 1)) if mode == "tp" else cfg.d_ff
+        attn = (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.hd if cfg.has_attention else 0
+        ssm = 3 * cfg.d_inner if cfg.has_ssm else 0
+        moe_ff = 0 if cfg.is_moe else 2 * ff_eff  # expert dots are batched -> recomputed
+        per_tok = 2 * d + attn + ssm + moe_ff
+    act = cfg.n_layers * tok_loc * per_tok * 2  # bf16
+    # each microbatch's *global* batch must still divide the batch shards
+    mb_cap = max(shape.global_batch // n_batch_shards, 1)
+    mb = 1
+    while act / mb > budget_bytes and mb < mb_cap:
+        mb *= 2
+    while shape.global_batch % mb != 0 and mb < mb_cap:
+        mb *= 2
+    return min(mb, mb_cap)
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int | None = None):
+    def prefill_step(params, batch):
+        return T.prefill(cfg, params, batch.get("tokens"),
+                         embeds=batch.get("embeds"), max_len=max_len)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, caches, batch):
+        logits, caches = T.decode_step(cfg, params, batch["tokens"], caches,
+                                       batch["pos"])
+        return logits, caches
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# jit assembly with explicit in/out shardings
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class StepBundle:
+    """Everything the launcher / dry-run needs for one (arch x shape) cell."""
+    cfg: ModelConfig
+    shape: ShapeSpec
+    mesh: Mesh
+    step: Any            # jitted function
+    example_args: tuple  # ShapeDtypeStructs to .lower(*example_args)
+    report: ShardingReport
+    kind: str
+
+
+def _dryrun_cfg(cfg: ModelConfig, shape: ShapeSpec) -> ModelConfig:
+    """Remat policy for lowering: big models full-remat their scan body,
+    small ones only save dots — same knob a production run would set."""
+    if shape.kind != "train" or cfg.remat != "none":
+        return cfg
+    policy = "full" if cfg.param_count() > 10e9 else "dots"
+    return dataclasses.replace(cfg, remat=policy)
+
+
+def _act_spec(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+              tok_spec) -> tuple:
+    """(batch_axes, seq_axes, vocab_axis) for activation constraints.
+
+    TP mode adds Megatron-style sequence parallelism: between blocks the
+    residual stream is sharded over ``model`` on the *sequence* dim, so the
+    per-device saved-activation stack shrinks by the TP degree.  (Without
+    it, batch microbatching alone bottoms out at B/batch_shards and a 110B
+    train step carries an 86 GB residual stack.)
+    """
+    from repro.distributed.sharding import plan_parallelism
+    b, s = tok_spec[0], (tok_spec[1] if len(tok_spec) > 1 else None)
+    used = set(b) if isinstance(b, tuple) else ({b} if b else set())
+    used |= set(s) if isinstance(s, tuple) else ({s} if s else set())
+    if (s is None and shape.kind in ("train", "prefill")
+            and plan_parallelism(cfg) == "tp" and "model" not in used
+            and shape.seq_len % _ax(mesh, "model") == 0):
+        s = "model"
+        used.add("model")
+    v = "model" if ("model" not in used
+                    and cfg.vocab_size % _ax(mesh, "model") == 0) else None
+    return (b, s, v)
+
+
+VARIANTS = ("baseline", "remat_none", "remat_dots", "ep_resident",
+            "w8_weights", "kv8", "w8kv8", "no_seqpar", "mb_half",
+            "logits_bf16", "grad_shard", "loss_vtp", "loss_vtp_mb_half",
+            "sp_gather", "combo_tp", "combo_tp_mb8")
+
+
+def build_jitted_step(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                      *, donate: bool = True,
+                      variant: str = "baseline") -> StepBundle:
+    """``variant`` selects one §Perf hillclimb change (see VARIANTS):
+
+      remat_none / remat_dots — force the activation-checkpoint policy,
+      ep_resident  — expert weights sharded on E only (no ZeRO-3 on d/ff:
+                     weights stay resident, activations do the moving —
+                     the paper's weight-stationary insight),
+      w8_weights   — int8 weight-only serving (weights stream at half the
+                     bytes; dequant fused at use — the paper's pipeline),
+      no_seqpar    — disable Megatron sequence parallelism (ablation),
+      mb_half      — half the auto-chosen microbatch count (ablation),
+      logits_bf16  — keep the loss logits in bf16 (halve loss-chunk bytes).
+    """
+    assert variant in VARIANTS, variant
+    cfg = _dryrun_cfg(cfg, shape)
+    if variant == "remat_none":
+        cfg = dataclasses.replace(cfg, remat="none")
+    elif variant == "remat_dots":
+        cfg = dataclasses.replace(cfg, remat="dots")
+    elif variant == "logits_bf16":
+        cfg = dataclasses.replace(cfg, loss_dtype="bfloat16")
+    elif variant in ("kv8", "w8kv8") and shape.kind != "train":
+        cfg = dataclasses.replace(cfg, kv_dtype="int8")
+    elif variant in ("loss_vtp", "loss_vtp_mb_half"):
+        cfg = dataclasses.replace(cfg, loss_vocab_tp=True)
+    elif variant == "sp_gather":
+        cfg = dataclasses.replace(cfg, megatron_sp=True)
+    elif variant in ("combo_tp", "combo_tp_mb8"):  # sp_gather + loss_vtp
+        cfg = dataclasses.replace(cfg, megatron_sp=True, loss_vocab_tp=True)
+    report = ShardingReport()
+    batch = input_specs(cfg, shape)
+    batch_sh = {}
+    tok_sh = make_batch_sharding(cfg, mesh, shape, report)
+    aspec = _act_spec(cfg, shape, mesh, tuple(tok_sh.spec))
+    if variant == "no_seqpar":
+        aspec = (aspec[0], None, aspec[2])
+    cfg = dataclasses.replace(cfg, act_spec=aspec)
+    params = abstract_params(cfg)
+    params_sh = make_param_shardings(cfg, mesh, params, report)
+    if variant == "ep_resident":
+        params_sh = _ep_resident_shardings(params_sh, mesh)
+    for k, v in batch.items():
+        if k in ("tokens", "labels"):
+            batch_sh[k] = tok_sh
+        elif k == "embeds":
+            batch_sh[k] = NamedSharding(mesh, P(*tok_sh.spec, None))
+        else:  # pos scalar
+            batch_sh[k] = NamedSharding(mesh, P())
+    repl = NamedSharding(mesh, P())
+
+    if variant in ("w8_weights", "w8kv8") and shape.kind != "train":
+        params, params_sh = _quantized_abstract_params(cfg, mesh, params_sh)
+
+    if shape.kind == "train":
+        optimizer = make_optimizer(cfg)
+        opt_state = abstract_opt_state(optimizer, params)
+        opt_sh = _opt_state_shardings(optimizer, params_sh, opt_state, mesh)
+        n_mb = default_microbatches(cfg, shape, mesh)
+        if variant in ("mb_half", "loss_vtp_mb_half", "combo_tp_mb8"):
+            n_mb = max(1, n_mb // 2)
+        if n_mb > 1:
+            report.fallbacks.append(f"gradient accumulation: {n_mb} microbatches")
+        gspecs = None
+        if variant == "grad_shard":
+            gspecs = jax.tree.map(lambda s: s.spec, params_sh,
+                                  is_leaf=lambda x: isinstance(x, NamedSharding))
+        step = jax.jit(
+            make_train_step(cfg, optimizer, n_mb, grad_specs=gspecs),
+            in_shardings=(params_sh, opt_sh, batch_sh),
+            out_shardings=(params_sh, opt_sh,
+                           {"loss": repl, "grad_norm": repl}),
+            donate_argnums=(0, 1) if donate else (),
+        )
+        args = (params, opt_state, batch)
+    elif shape.kind == "prefill":
+        caches = abstract_caches(cfg, shape)
+        caches_sh = make_cache_shardings(cfg, mesh, shape, caches, report)
+        logits_sh = NamedSharding(
+            mesh, P(tok_sh.spec[0],
+                    "model" if cfg.vocab_size % _ax(mesh, "model") == 0
+                    else None))
+        prefill_fn = make_prefill_step(cfg)
+        if variant in ("w8_weights", "w8kv8"):
+            inner_p = prefill_fn
+            prefill_fn = lambda p, b: inner_p(_dequant_tree(p, cfg.jdtype), b)
+        step = jax.jit(
+            prefill_fn,
+            in_shardings=(params_sh, batch_sh),
+            out_shardings=(logits_sh, caches_sh),
+        )
+        args = (params, batch)
+    else:  # decode
+        caches = abstract_caches(cfg, shape)
+        caches_sh = make_cache_shardings(cfg, mesh, shape, caches, report)
+        logits_sh = NamedSharding(
+            mesh, P(make_batch_sharding(cfg, mesh, shape).spec[0],
+                    "model" if cfg.vocab_size % _ax(mesh, "model") == 0
+                    else None))
+        decode_fn = make_decode_step(cfg)
+        if variant in ("w8_weights", "w8kv8"):
+            inner_d = decode_fn
+            decode_fn = lambda p, c, b: inner_d(_dequant_tree(p, cfg.jdtype),
+                                                c, b)
+        step = jax.jit(
+            decode_fn,
+            in_shardings=(params_sh, caches_sh, batch_sh),
+            out_shardings=(logits_sh, caches_sh),
+            donate_argnums=(1,) if donate else (),
+        )
+        args = (params, caches, batch)
+
+    return StepBundle(cfg=cfg, shape=shape, mesh=mesh, step=step,
+                      example_args=args, report=report, kind=shape.kind)
+
+
+def _ax(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+# ---------------------------------------------------------------------------
+# §Perf variant helpers
+# ---------------------------------------------------------------------------
+def _is_qleaf(x) -> bool:
+    return isinstance(x, dict) and "q" in x and "scale" in x
+
+
+def _dequant_tree(params_q, dtype):
+    """{'q': int8, 'scale': f32} leaves -> dense weights (fused at use)."""
+
+    def leaf(x):
+        if _is_qleaf(x):
+            scale = x["scale"]
+            if scale.ndim == 1:
+                scale = scale[None, :]
+            return (x["q"].astype(dtype) * scale.astype(dtype))
+        return x
+
+    return jax.tree.map(leaf, params_q, is_leaf=_is_qleaf)
+
+
+def _quantized_abstract_params(cfg: ModelConfig, mesh: Mesh, params_sh):
+    """Abstract int8 weight tree + matching shardings (w8_weights variant)."""
+    from repro.quant import quantize_lm_params
+
+    qparams = jax.eval_shape(
+        lambda: quantize_lm_params(T.init_lm(cfg, jax.random.key(0))))
+
+    def shard(qx, psh):
+        if not _is_qleaf(qx):
+            return psh
+        spec = tuple(psh.spec)
+        # scales are per-channel over the whole stack (leading dims of 1):
+        # replicate — they're O(channels) bytes.
+        sspec = (None,) * qx["scale"].ndim
+        return {"q": NamedSharding(mesh, P(*spec)),
+                "scale": NamedSharding(mesh, P(*sspec))}
+
+    qsh = jax.tree.map(shard, qparams, params_sh,
+                       is_leaf=lambda x: _is_qleaf(x)
+                       or isinstance(x, NamedSharding))
+    return qparams, qsh
+
+
+def _ep_resident_shardings(params_sh, mesh: Mesh):
+    """Expert weights sharded on E only (weight-stationary EP)."""
+
+    def leaf(path, sh):
+        parts = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        if len(parts) >= 2 and parts[-2] == "moe" and \
+                parts[-1] in ("wi", "wg", "wo"):
+            spec = list(sh.spec)
+            nd = len(spec)
+            new = [None] * nd
+            new[nd - 3] = spec[nd - 3]  # keep the expert axis only
+            return NamedSharding(mesh, P(*new))
+        return sh
+
+    return jax.tree_util.tree_map_with_path(
+        leaf, params_sh, is_leaf=lambda x: isinstance(x, NamedSharding))

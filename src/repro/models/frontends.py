@@ -1,0 +1,23 @@
+"""Stub modality frontends (per assignment: [audio]/[vlm] backbones only).
+
+The real EnCodec / InternViT towers are out of scope; ``input_specs()``
+provides precomputed frame/patch embeddings for vlm and token ids for the
+EnCodec-token (audio) decoder.  These stubs make the examples runnable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def stub_embeddings(cfg: ModelConfig, key, batch: int, seq_len: int) -> jax.Array:
+    """Precomputed patch/frame embeddings stand-in: [B, S, d_model]."""
+    return (jax.random.normal(key, (batch, seq_len, cfg.d_model), jnp.float32)
+            * 0.02).astype(cfg.jdtype)
+
+
+def stub_tokens(cfg: ModelConfig, key, batch: int, seq_len: int) -> jax.Array:
+    """EnCodec-style token ids: [B, S] in [0, vocab)."""
+    return jax.random.randint(key, (batch, seq_len), 0, cfg.vocab_size, jnp.int32)

@@ -1,0 +1,279 @@
+"""Inception v3 — the paper's evaluation workload (Table I).
+
+One structure definition drives BOTH:
+  * ``inception_v3_specs()`` — the per-branch LayerSpec list consumed by the
+    Neural Cache mapper/simulator (reproduces Table I's Conv / Filter-MB
+    columns exactly; see tests/test_inception.py), and
+  * ``init_params`` / ``apply`` — a runnable JAX forward pass (float and
+    dynamically-quantized uint8, the paper's §IV-D pipeline).
+
+BN is inference-folded into a per-channel scale/bias on every conv.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mapper import LayerSpec
+from repro.core import quantize as q
+
+# ---------------------------------------------------------------------------
+# Structure: op = ("conv", R, S, M, stride, pad) | ("maxpool"|"avgpool", R, stride, pad)
+# A block is either a single op or a list of branches (each a list of ops).
+# ---------------------------------------------------------------------------
+STEM = [
+    ("Conv2d_1a_3x3", ("conv", 3, 3, 32, 2, "VALID")),
+    ("Conv2d_2a_3x3", ("conv", 3, 3, 32, 1, "VALID")),
+    ("Conv2d_2b_3x3", ("conv", 3, 3, 64, 1, "SAME")),
+    ("MaxPool_3a_3x3", ("maxpool", 3, 2, "VALID")),
+    ("Conv2d_3b_1x1", ("conv", 1, 1, 80, 1, "VALID")),
+    ("Conv2d_4a_3x3", ("conv", 3, 3, 192, 1, "VALID")),
+    ("MaxPool_5a_3x3", ("maxpool", 3, 2, "VALID")),
+]
+
+
+def _inception_a(pool_proj: int):  # Mixed_5x (35x35)
+    return [
+        [("conv", 1, 1, 64, 1, "SAME")],
+        [("conv", 1, 1, 48, 1, "SAME"), ("conv", 5, 5, 64, 1, "SAME")],
+        [
+            ("conv", 1, 1, 64, 1, "SAME"),
+            ("conv", 3, 3, 96, 1, "SAME"),
+            ("conv", 3, 3, 96, 1, "SAME"),
+        ],
+        [("avgpool", 3, 1, "SAME"), ("conv", 1, 1, pool_proj, 1, "SAME")],
+    ]
+
+
+def _reduction_a():  # Mixed_6a (35 -> 17)
+    return [
+        [("conv", 3, 3, 384, 2, "VALID")],
+        [
+            ("conv", 1, 1, 64, 1, "SAME"),
+            ("conv", 3, 3, 96, 1, "SAME"),
+            ("conv", 3, 3, 96, 2, "VALID"),
+        ],
+        [("maxpool", 3, 2, "VALID")],
+    ]
+
+
+def _inception_b(c7: int):  # Mixed_6b..6e (17x17)
+    return [
+        [("conv", 1, 1, 192, 1, "SAME")],
+        [
+            ("conv", 1, 1, c7, 1, "SAME"),
+            ("conv", 1, 7, c7, 1, "SAME"),
+            ("conv", 7, 1, 192, 1, "SAME"),
+        ],
+        [
+            ("conv", 1, 1, c7, 1, "SAME"),
+            ("conv", 7, 1, c7, 1, "SAME"),
+            ("conv", 1, 7, c7, 1, "SAME"),
+            ("conv", 7, 1, c7, 1, "SAME"),
+            ("conv", 1, 7, 192, 1, "SAME"),
+        ],
+        [("avgpool", 3, 1, "SAME"), ("conv", 1, 1, 192, 1, "SAME")],
+    ]
+
+
+def _reduction_b():  # Mixed_7a (17 -> 8)
+    return [
+        [("conv", 1, 1, 192, 1, "SAME"), ("conv", 3, 3, 320, 2, "VALID")],
+        [
+            ("conv", 1, 1, 192, 1, "SAME"),
+            ("conv", 1, 7, 192, 1, "SAME"),
+            ("conv", 7, 1, 192, 1, "SAME"),
+            ("conv", 3, 3, 192, 2, "VALID"),
+        ],
+        [("maxpool", 3, 2, "VALID")],
+    ]
+
+
+def _inception_c():  # Mixed_7b/7c (8x8); nested split branches flattened
+    return [
+        [("conv", 1, 1, 320, 1, "SAME")],
+        [("conv", 1, 1, 384, 1, "SAME"), ("split", [("conv", 1, 3, 384, 1, "SAME")], [("conv", 3, 1, 384, 1, "SAME")])],
+        [
+            ("conv", 1, 1, 448, 1, "SAME"),
+            ("conv", 3, 3, 384, 1, "SAME"),
+            ("split", [("conv", 1, 3, 384, 1, "SAME")], [("conv", 3, 1, 384, 1, "SAME")]),
+        ],
+        [("avgpool", 3, 1, "SAME"), ("conv", 1, 1, 192, 1, "SAME")],
+    ]
+
+
+MIXED = [
+    ("Mixed_5b", _inception_a(32)),
+    ("Mixed_5c", _inception_a(64)),
+    ("Mixed_5d", _inception_a(64)),
+    ("Mixed_6a", _reduction_a()),
+    ("Mixed_6b", _inception_b(128)),
+    ("Mixed_6c", _inception_b(160)),
+    ("Mixed_6d", _inception_b(160)),
+    ("Mixed_6e", _inception_b(192)),
+    ("Mixed_7a", _reduction_b()),
+    ("Mixed_7b", _inception_c()),
+    ("Mixed_7c", _inception_c()),
+]
+
+IMG = 299
+
+
+def _out_size(h: int, r: int, stride: int, pad: str) -> int:
+    if pad == "SAME":
+        return math.ceil(h / stride)
+    return (h - r) // stride + 1
+
+
+# ---------------------------------------------------------------------------
+# Spec generation for the mapper/simulator
+# ---------------------------------------------------------------------------
+def _op_specs(name, block, op, h, c, specs):
+    """Append LayerSpecs for one op; return (out_h, out_c)."""
+    if op[0] == "conv":
+        _, r, s, m, stride, pad = op
+        e = _out_size(h, max(r, s), stride, pad)
+        specs.append(
+            LayerSpec(name=name, kind="conv", H=h, R=r, S=s, C=c, M=m, E=e,
+                      stride=stride, block=block)
+        )
+        return e, m
+    if op[0] in ("maxpool", "avgpool"):
+        _, r, stride, pad = op
+        e = _out_size(h, r, stride, pad)
+        specs.append(
+            LayerSpec(name=name, kind=op[0], H=h, R=r, S=r, C=0, M=c, E=e,
+                      stride=stride, block=block)
+        )
+        return e, c
+    if op[0] == "split":
+        out_c = 0
+        e = h
+        for i, sub in enumerate(op[1:]):
+            hh, cc = h, c
+            for j, sop in enumerate(sub):
+                hh, cc = _op_specs(f"{name}_s{i}_{j}", block, sop, hh, cc, specs)
+            out_c += cc
+            e = hh
+        return e, out_c
+    raise ValueError(op)
+
+
+def inception_v3_specs() -> list[LayerSpec]:
+    specs: list[LayerSpec] = []
+    h, c = IMG, 3
+    for name, op in STEM:
+        h, c = _op_specs(name, name, op, h, c, specs)
+    for bname, branches in MIXED:
+        out_c = 0
+        out_h = h
+        for bi, branch in enumerate(branches):
+            hh, cc = h, c
+            for oi, op in enumerate(branch):
+                hh, cc = _op_specs(f"{bname}_b{bi}_{oi}", bname, op, hh, cc, specs)
+            out_c += cc
+            out_h = hh
+        h, c = out_h, out_c
+    # global average pool (8x8 window) + FC-as-1x1-conv (§IV-D)
+    specs.append(LayerSpec("AvgPool", "avgpool", H=h, R=h, S=h, C=0, M=c, E=1,
+                           stride=1, block="AvgPool"))
+    specs.append(LayerSpec("FullyConnected", "fc", H=1, R=1, S=1, C=c, M=1001,
+                           E=1, stride=1, block="FullyConnected"))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Runnable JAX model (NHWC).  BN folded: per-channel scale/bias after conv.
+# ---------------------------------------------------------------------------
+def _conv_init(key, r, s, c, m, dtype=jnp.float32):
+    fan_in = r * s * c
+    w = jax.random.normal(key, (r, s, c, m), dtype) * (2.0 / fan_in) ** 0.5
+    return {"w": w, "scale": jnp.ones((m,), dtype), "bias": jnp.zeros((m,), dtype)}
+
+
+def _iter_convs(img: int = IMG):
+    """Yield (path, r, s, c, m) for every conv in definition order."""
+    specs = inception_v3_specs()
+    for sp in specs:
+        if sp.kind in ("conv", "fc"):
+            yield sp.name, sp.R, sp.S, sp.C, sp.M
+
+
+def init_params(key: jax.Array, dtype=jnp.float32) -> dict:
+    params = {}
+    convs = list(_iter_convs())
+    keys = jax.random.split(key, len(convs))
+    for k, (name, r, s, c, m) in zip(keys, convs):
+        params[name] = _conv_init(k, r, s, c, m, dtype)
+    return params
+
+
+def _conv(x, p, stride, pad):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], (stride, stride), pad,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y * p["scale"] + p["bias"]
+
+
+def _pool(x, kind, r, stride, pad):
+    if kind == "maxpool":
+        return jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, r, r, 1), (1, stride, stride, 1), pad
+        )
+    ones = jax.lax.reduce_window(
+        jnp.ones_like(x), 0.0, jax.lax.add, (1, r, r, 1), (1, stride, stride, 1), pad
+    )
+    s = jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, r, r, 1), (1, stride, stride, 1), pad
+    )
+    return s / ones
+
+
+def _apply_op(x, name, op, params, quant: bool):
+    if op[0] == "conv":
+        _, r, s, m, stride, pad = op
+        p = params[name]
+        if quant:
+            x = q.fake_quant(x)  # dynamic uint8 activations (§IV-D)
+            wq, wscale = q.quantize_per_channel(p["w"], axis=-1)
+            p = dict(p, w=wq.astype(jnp.float32) * wscale)
+        y = _conv(x, p, stride, pad)
+        return jax.nn.relu(y)
+    if op[0] in ("maxpool", "avgpool"):
+        _, r, stride, pad = op
+        return _pool(x, op[0], r, stride, pad)
+    if op[0] == "split":
+        outs = []
+        for i, sub in enumerate(op[1:]):
+            y = x
+            for j, sop in enumerate(sub):
+                y = _apply_op(y, f"{name}_s{i}_{j}", sop, params, quant)
+            outs.append(y)
+        return jnp.concatenate(outs, axis=-1)
+    raise ValueError(op)
+
+
+def apply(params: dict, x: jax.Array, quant: bool = False) -> jax.Array:
+    """Forward pass.  x: [N, H, W, 3] float32 in [0,1].  Returns [N, 1001]."""
+    for name, op in STEM:
+        x = _apply_op(x, name, op, params, quant)
+    for bname, branches in MIXED:
+        outs = []
+        for bi, branch in enumerate(branches):
+            y = x
+            for oi, op in enumerate(branch):
+                y = _apply_op(y, f"{bname}_b{bi}_{oi}", op, params, quant)
+            outs.append(y)
+        x = jnp.concatenate(outs, axis=-1)
+    x = jnp.mean(x, axis=(1, 2))  # global average pool
+    if quant:
+        x = q.fake_quant(x)
+    p = params["FullyConnected"]
+    logits = x @ p["w"][0, 0] * p["scale"] + p["bias"]
+    return logits

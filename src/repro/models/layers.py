@@ -1,0 +1,441 @@
+"""Transformer building blocks — pure-functional JAX (params are pytrees).
+
+Attention is flash-style in pure JAX (scan over KV tiles with running
+softmax) so 32k+ prefill never materializes a [Tq, Tk] score tensor.
+Sliding-window layers use a *banded* variant: a fixed-width KV strip is
+dynamically sliced per Q tile, so HLO FLOPs scale with window, not context.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) / math.sqrt(d_in)).astype(dtype)
+
+
+def embed_init(key, v: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (v, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rms_norm(x, w, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, w=None, b=None, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if w is not None:
+        out = out * w.astype(jnp.float32)
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def norm_init(cfg: ModelConfig, key) -> dict:
+    if cfg.norm == "rmsnorm":
+        return {"w": jnp.ones((cfg.d_model,), cfg.jdtype)}
+    if cfg.norm == "layernorm":
+        return {"w": jnp.ones((cfg.d_model,), cfg.jdtype),
+                "b": jnp.zeros((cfg.d_model,), cfg.jdtype)}
+    if cfg.norm == "layernorm_np":  # OLMo: non-parametric
+        return {}
+    raise ValueError(cfg.norm)
+
+
+def apply_norm(cfg: ModelConfig, p: dict, x):
+    if cfg.norm == "rmsnorm":
+        return rms_norm(x, p["w"])
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["w"], p["b"])
+    return layer_norm(x)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, H, T, D]; positions: [B, T] or [T]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, T, D/2]
+    cos = jnp.cos(angles)[:, None, :, :]
+    sin = jnp.sin(angles)[:, None, :, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+def attention_init(cfg: ModelConfig, key) -> dict:
+    dt = cfg.jdtype
+    ks = jax.random.split(key, 4)
+    d, hd, H, Hkv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    p = {
+        "wq": dense_init(ks[0], d, H * hd, dt),
+        "wk": dense_init(ks[1], d, Hkv * hd, dt),
+        "wv": dense_init(ks[2], d, Hkv * hd, dt),
+        "wo": dense_init(ks[3], H * hd, d, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dt)
+        p["bk"] = jnp.zeros((Hkv * hd,), dt)
+        p["bv"] = jnp.zeros((Hkv * hd,), dt)
+    return p
+
+
+def _qkv(cfg: ModelConfig, p: dict, x, positions):
+    B, T, _ = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(B, T, Hkv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, T, Hkv, hd).transpose(0, 2, 1, 3)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _tile_attn(q, k, v, qpos, kpos, window: int):
+    """One (Q-tile, KV-strip) flash step.  q:[B,Hkv,G,qc,D] k/v:[B,Hkv,kc,D].
+    Returns (scores-max m, exp-sum l, weighted acc)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", q, k, preferred_element_type=jnp.float32) * scale
+    mask = kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    m = jnp.max(s, axis=-1)
+    # guard fully-masked rows (padding tiles)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(jnp.isfinite(s), p, 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return m_safe, l, acc
+
+
+def flash_attention(
+    q: jax.Array,  # [B, H, Tq, D]
+    k: jax.Array,  # [B, Hkv, Tk, D]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: jax.Array | int = 0,
+    kv_valid: jax.Array | int | None = None,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Tiled flash attention (GQA) in pure JAX.
+
+    window > 0 uses the *banded* path: per Q tile only a fixed
+    (window + q_chunk)-wide KV strip is sliced, so cost is O(T * window).
+    """
+    B, H, Tq, D = q.shape
+    Hkv, Tk = k.shape[1], k.shape[2]
+    G = H // Hkv
+    q_chunk = min(q_chunk, Tq)
+    kv_chunk = min(kv_chunk, Tk)
+
+    pad_q = (-Tq) % q_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    Tqp = q.shape[2]
+    qg = q.reshape(B, Hkv, G, Tqp, D)
+    nq = Tqp // q_chunk
+
+    kv_valid = Tk if kv_valid is None else kv_valid
+
+    if window > 0:
+        # banded: strip width rounded up to kv_chunk multiple
+        strip = int(math.ceil((window + q_chunk) / kv_chunk)) * kv_chunk
+        strip = min(strip, Tk)
+
+        def q_tile(i):
+            qi = jax.lax.dynamic_slice_in_dim(qg, i * q_chunk, q_chunk, axis=3)
+            qpos = i * q_chunk + jnp.arange(q_chunk) + q_offset
+            start = jnp.clip(i * q_chunk + q_offset - (strip - q_chunk), 0, Tk - strip)
+            ks = jax.lax.dynamic_slice_in_dim(k, start, strip, axis=2)
+            vs = jax.lax.dynamic_slice_in_dim(v, start, strip, axis=2)
+            kpos = start + jnp.arange(strip)
+            kpos = jnp.where(kpos < kv_valid, kpos, jnp.iinfo(jnp.int32).max)
+            m, l, acc = _tile_attn(qi, ks, vs, qpos, kpos, window)
+            return acc / jnp.maximum(l, 1e-30)[..., None]
+
+        # checkpoint: recompute the tile's scores in the backward pass
+        # instead of stacking O(T * strip) residuals across the map.
+        q_tile = jax.checkpoint(q_tile)
+        out = jax.lax.map(q_tile, jnp.arange(nq))  # [nq,B,Hkv,G,qc,D]
+        out = jnp.moveaxis(out, 0, 3).reshape(B, Hkv, G, Tqp, D)
+    else:
+        pad_k = (-Tk) % kv_chunk
+        if pad_k:
+            k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        nk = k.shape[2] // kv_chunk
+        kc = k.reshape(B, Hkv, nk, kv_chunk, D)
+        vc = v.reshape(B, Hkv, nk, kv_chunk, D)
+
+        def q_tile(i):
+            qi = jax.lax.dynamic_slice_in_dim(qg, i * q_chunk, q_chunk, axis=3)
+            qpos = i * q_chunk + jnp.arange(q_chunk) + q_offset
+            if not causal:
+                qpos = jnp.full_like(qpos, jnp.iinfo(jnp.int32).max // 2)
+
+            def kv_step(carry, j):
+                m, l, acc = carry
+                kj, vj = kc[:, :, j], vc[:, :, j]
+                kpos = j * kv_chunk + jnp.arange(kv_chunk)
+                kpos = jnp.where(kpos < kv_valid, kpos, jnp.iinfo(jnp.int32).max)
+                mj, lj, accj = _tile_attn(qi, kj, vj, qpos, kpos, 0)
+                m_new = jnp.maximum(m, mj)
+                c1 = jnp.exp(m - m_new)
+                c2 = jnp.exp(mj - m_new)
+                return (m_new, l * c1 + lj * c2,
+                        acc * c1[..., None] + accj * c2[..., None]), None
+
+            m0 = jnp.full((B, Hkv, G, q_chunk), -jnp.inf, jnp.float32)
+            l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+            a0 = jnp.zeros((B, Hkv, G, q_chunk, D), jnp.float32)
+            # checkpoint the KV step: the scan's AD then saves only the
+            # (m, l, acc) carries per step and recomputes the (qc, kc)
+            # score tile in the backward — flash-backward memory behavior.
+            # Without this, autodiff stacks every f32 score tile: the full
+            # O(T^2) matrix the flash structure exists to avoid.
+            (m, l, acc), _ = jax.lax.scan(jax.checkpoint(kv_step),
+                                          (m0, l0, a0), jnp.arange(nk))
+            return acc / jnp.maximum(l, 1e-30)[..., None]
+
+        out = jax.lax.map(jax.checkpoint(q_tile), jnp.arange(nq))
+        out = jnp.moveaxis(out, 0, 3).reshape(B, Hkv, G, Tqp, D)
+
+    out = out.reshape(B, H, Tqp, D)[:, :, :Tq]
+    return out.astype(v.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, window: int = 0):
+    """Single-token attention over a [B,Hkv,S,D] cache; pos = current index."""
+    B, H, _, D = q.shape
+    Hkv, S = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, 1, D)
+    scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    kpos = jnp.arange(S)
+    mask = kpos <= pos
+    if window > 0:
+        mask &= kpos > pos - window
+    s = jnp.where(mask[None, None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, 1, D).astype(v_cache.dtype)
+
+
+def attention_apply(cfg, p, x, positions, *, window=0, cache=None, cache_pos=None):
+    """Returns (out [B,T,d], new_cache or None).
+
+    cache: dict(k=[B,Hkv,W,D], v=...) — decode appends at ``cache_pos % W``
+    (ring for SWA layers); prefill with cache returns the populated cache.
+    """
+    B, T, _ = x.shape
+    q, k, v = _qkv(cfg, p, x, positions)
+    new_cache = None
+    kv8 = cfg.kv_dtype == "int8"
+    if cache is not None and T == 1 and kv8:
+        W = cache["k"].shape[2]
+        slot = cache_pos % W if window > 0 else cache_pos
+        kq, ks1 = kv_quantize(k)
+        vq, vs1 = kv_quantize(v)
+        dus = jax.lax.dynamic_update_slice_in_dim
+        new_cache = {"k": dus(cache["k"], kq, slot, axis=2),
+                     "v": dus(cache["v"], vq, slot, axis=2),
+                     "ks": dus(cache["ks"], ks1, slot, axis=2),
+                     "vs": dus(cache["vs"], vs1, slot, axis=2)}
+        if window > 0:
+            ring_len = jnp.minimum(cache_pos + 1,
+                                   W if window >= W else window)
+            out = decode_attention_q8(
+                q, new_cache["k"], new_cache["ks"], new_cache["v"],
+                new_cache["vs"], cache_pos, ring_slot=slot,
+                ring_len=ring_len)
+        else:
+            out = decode_attention_q8(
+                q, new_cache["k"], new_cache["ks"], new_cache["v"],
+                new_cache["vs"], cache_pos)
+        out = out.astype(x.dtype)
+    elif cache is not None and T == 1:
+        W = cache["k"].shape[2]
+        slot = cache_pos % W if window > 0 else cache_pos
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=2)
+        new_cache = {"k": kc, "v": vc}
+        if window > 0:
+            # ring buffer: positions are implicit; rebuild kpos mask by slot age
+            kpos = jnp.arange(W)
+            age = (slot - kpos) % W  # 0 = newest
+            mask = age < jnp.minimum(cache_pos + 1, W if window >= W else window)
+            s = jnp.einsum(
+                "bhgqd,bhkd->bhgqk",
+                q.reshape(B, cfg.n_kv_heads, cfg.q_groups, 1, cfg.hd), kc,
+                preferred_element_type=jnp.float32,
+            ) / math.sqrt(cfg.hd)
+            s = jnp.where(mask[None, None, None, None], s, -jnp.inf)
+            pr = jax.nn.softmax(s, axis=-1)
+            out = jnp.einsum("bhgqk,bhkd->bhgqd", pr.astype(vc.dtype), vc,
+                             preferred_element_type=jnp.float32)
+            out = out.reshape(B, cfg.n_heads, 1, cfg.hd).astype(x.dtype)
+        else:
+            out = decode_attention(q, kc, vc, cache_pos, window=0)
+    else:
+        out = flash_attention(
+            q, k, v, causal=True, window=window,
+            q_chunk=cfg.attn_chunk_q, kv_chunk=cfg.attn_chunk_kv,
+        )
+        if cache is not None:  # prefill into cache
+            W = cache["k"].shape[2]
+            if window > 0 and W < k.shape[2]:
+                # ring layout: absolute position p lives at slot p % W
+                T_total = k.shape[2]
+                k, v = k[:, :, -W:], v[:, :, -W:]
+                k = jnp.roll(k, T_total % W, axis=2)
+                v = jnp.roll(v, T_total % W, axis=2)
+            dus = jax.lax.dynamic_update_slice_in_dim
+            if kv8:
+                kq, ks1 = kv_quantize(k)
+                vq, vs1 = kv_quantize(v)
+                new_cache = {"k": dus(cache["k"], kq, 0, axis=2),
+                             "v": dus(cache["v"], vq, 0, axis=2),
+                             "ks": dus(cache["ks"], ks1, 0, axis=2),
+                             "vs": dus(cache["vs"], vs1, 0, axis=2)}
+            else:
+                new_cache = {"k": dus(cache["k"], k, 0, axis=2),
+                             "v": dus(cache["v"], v, 0, axis=2)}
+    B_, H, Tq, hd = out.shape
+    out = out.transpose(0, 2, 1, 3).reshape(B, Tq, H * hd)
+    return out @ p["wo"], new_cache
+
+
+def attention_cache_init(cfg: ModelConfig, batch: int, seq_len: int, window: int) -> dict:
+    W = min(window, seq_len) if window > 0 else seq_len
+    shape = (batch, cfg.n_kv_heads, W, cfg.hd)
+    if cfg.kv_dtype == "int8":
+        # the paper's in-cache 8-bit layout for the KV cache: int8 payload
+        # + per-(position, head) f32 scales (~1.5% overhead at hd=128)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "ks": jnp.zeros(shape[:3] + (1,), jnp.float32),
+                "vs": jnp.zeros(shape[:3] + (1,), jnp.float32)}
+    return {"k": jnp.zeros(shape, cfg.jdtype), "v": jnp.zeros(shape, cfg.jdtype)}
+
+
+# ---------------------------------------------------------------------------
+# int8 KV cache helpers (kv_dtype="int8")
+# ---------------------------------------------------------------------------
+def kv_quantize(x: jax.Array):
+    """[B,Hkv,T,D] -> (int8 values, f32 [B,Hkv,T,1] per-(pos,head) scales)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(scale, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def decode_attention_q8(q, kq, ks, vq, vs, pos, window: int = 0,
+                        ring_slot=None, ring_len=None):
+    """Single-token attention on an int8 cache, int8 matmuls throughout.
+
+    QK^T runs int8 x int8 -> int32 (MXU native), scaled by per-position key
+    scales; softmax probs absorb the per-position *value* scales and are
+    requantized to int8 for the PV matmul — the same
+    quantize -> integer-MAC -> rescale pipeline the paper runs on bit lines.
+    """
+    B, H, _, D = q.shape
+    Hkv, S = kq.shape[1], kq.shape[2]
+    G = H // Hkv
+    # quantize the query per (batch, head)
+    qg = q.reshape(B, Hkv, G, 1, D)
+    qs = jnp.max(jnp.abs(qg.astype(jnp.float32)), axis=-1, keepdims=True)
+    qs = jnp.maximum(qs, 1e-12) / 127.0
+    qq = jnp.clip(jnp.round(qg.astype(jnp.float32) / qs), -127, 127
+                  ).astype(jnp.int8)
+    s_int = jnp.einsum("bhgqd,bhkd->bhgqk", qq, kq,
+                       preferred_element_type=jnp.int32)
+    # scales: qs [B,Hkv,G,1,1] x ks [B,Hkv,S,1] -> [B,Hkv,1,1,S]
+    s = (s_int.astype(jnp.float32) * qs
+         * ks[..., 0][:, :, None, None, :]) / math.sqrt(D)
+    if ring_slot is not None:  # SWA ring buffer: mask by slot age
+        kpos = jnp.arange(S)
+        age = (ring_slot - kpos) % S
+        mask = age < ring_len
+    else:
+        kpos = jnp.arange(S)
+        mask = kpos <= pos
+        if window > 0:
+            mask &= kpos > pos - window
+    s = jnp.where(mask[None, None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)  # [B,Hkv,G,1,S]
+    # fold per-position value scales into p, requantize rows to int8
+    pv = p * vs[..., 0][:, :, None, None, :]
+    p_scale = jnp.maximum(jnp.max(pv, axis=-1, keepdims=True), 1e-12) / 127.0
+    pq = jnp.clip(jnp.round(pv / p_scale), 0, 127).astype(jnp.int8)
+    out_int = jnp.einsum("bhgqk,bhkd->bhgqd", pq, vq,
+                         preferred_element_type=jnp.int32)
+    out = out_int.astype(jnp.float32) * p_scale
+    return out.reshape(B, H, 1, D)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+def mlp_init(cfg: ModelConfig, key, d_ff: int | None = None) -> dict:
+    dt = cfg.jdtype
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        return {
+            "wi": dense_init(ks[0], cfg.d_model, ff, dt),
+            "wg": dense_init(ks[1], cfg.d_model, ff, dt),
+            "wo": dense_init(ks[2], ff, cfg.d_model, dt),
+        }
+    return {
+        "wi": dense_init(ks[0], cfg.d_model, ff, dt),
+        "wo": dense_init(ks[2], ff, cfg.d_model, dt),
+    }
+
+
+def mlp_apply(cfg: ModelConfig, p: dict, x):
+    if cfg.act == "swiglu":
+        return (jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])) @ p["wo"]
+    return jax.nn.gelu(x @ p["wi"]) @ p["wo"]

@@ -1,0 +1,226 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) mixer.
+
+Three execution forms, equivalence-tested against each other:
+  * ``ssd_chunked``  — the blocked quadratic-within-chunk / recurrent-across-
+    chunk algorithm (training / prefill; O(T·Q) with chunk Q),
+  * ``ssd_recurrent``— the pure step-by-step recurrence (oracle in tests),
+  * ``step``         — single-token decode with (conv_state, ssm_state),
+    O(1) in context length (this is why the SSM archs run long_500k).
+
+State layout: h [B, n_heads, head_dim(P), state(N)]; B/C shared across heads
+(ngroups=1).  SSD math runs in float32 regardless of the model dtype.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+
+__all__ = ["mamba_init", "mamba_apply", "mamba_step", "mamba_cache_init",
+           "ssd_chunked", "ssd_recurrent"]
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+def mamba_init(cfg: ModelConfig, key) -> dict:
+    dt = cfg.jdtype
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = cfg.ssm_heads
+    conv_ch = di + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * N + nh, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch), jnp.float32)
+                   / math.sqrt(cfg.ssm_conv)).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),  # softplus^-1-ish small dt
+        "norm_w": jnp.ones((di,), dt),
+        "out_proj": dense_init(ks[3], di, d, dt),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv.  x: [B,T,C], w: [K,C]."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(K))
+    return out + b
+
+
+def _segsum_decay(a):
+    """a: [..., Q] log-decays -> L [..., Q, Q] with L[i,j]=exp(sum_{j<k<=i} a_k),
+    zero above the diagonal."""
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    Q = a.shape[-1]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    # mask BEFORE exp: upper-triangle diffs are large-positive, and
+    # where(mask, exp(diff), 0) would propagate 0*inf = NaN in the backward.
+    diff = jnp.where(mask, diff, -jnp.inf)
+    return jnp.exp(diff)
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+def ssd_recurrent(x, dt, A, Bm, Cm, D, h0=None):
+    """Oracle recurrence.  x:[B,T,nh,P] dt:[B,T,nh] A:[nh] B/C:[B,T,N].
+    Returns (y [B,T,nh,P], h_final [B,nh,P,N])."""
+    Bsz, T, nh, P = x.shape
+    N = Bm.shape[-1]
+    h = jnp.zeros((Bsz, nh, P, N), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # [B,nh,P],[B,nh],[B,N],[B,N]
+        decay = jnp.exp(dtt * A[None, :])  # [B,nh]
+        upd = jnp.einsum("bhp,bn,bh->bhpn", xt, bt, dtt)
+        h = h * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, ct) + D[None, :, None] * xt
+        return h, y
+
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2))
+    h, ys = jax.lax.scan(step, h, xs)
+    return ys.transpose(1, 0, 2, 3), h
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, chunk: int, h0=None):
+    """Blocked SSD (Mamba-2 §6): quadratic attention within chunks, linear
+    recurrence across chunk boundaries.  Same signature as ssd_recurrent."""
+    Bsz, T, nh, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, T)
+    pad = (-T) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Tp = x.shape[1]
+    nc = Tp // Q
+
+    xc = x.reshape(Bsz, nc, Q, nh, P)
+    dtc = dt.reshape(Bsz, nc, Q, nh)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+
+    a = dtc * A[None, None, None, :]  # [B,nc,Q,nh] log-decay per step
+    a_h = a.transpose(0, 1, 3, 2)  # [B,nc,nh,Q]
+    cs = jnp.cumsum(a_h, axis=-1)  # inclusive
+    L = _segsum_decay(a_h)  # [B,nc,nh,Q,Q]
+
+    # intra-chunk (diagonal blocks)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)  # [B,nc,Q,Q]
+    xdt = xc * dtc[..., None]  # [B,nc,Q,nh,P]
+    y_diag = jnp.einsum("bcqk,bchqk,bckhp->bcqhp", scores, L, xdt)
+
+    # chunk-final states
+    decay_end = jnp.exp(cs[..., -1:] - cs)  # [B,nc,nh,Q]
+    S = jnp.einsum("bckn,bchk,bckhp->bchpn", Bc, decay_end, xdt)
+
+    # inter-chunk recurrence over nc (linear scan; nc is small)
+    a_sum = jnp.exp(cs[..., -1])  # [B,nc,nh] total chunk decay
+
+    def boundary(h, inp):
+        s_c, decay_c = inp  # [B,nh,P,N], [B,nh]
+        h_next = h * decay_c[..., None, None] + s_c
+        return h_next, h  # emit state *entering* the chunk
+
+    h_init = jnp.zeros((Bsz, nh, P, N), jnp.float32) if h0 is None else h0
+    h_last, h_in = jax.lax.scan(
+        boundary, h_init,
+        (S.transpose(1, 0, 2, 3, 4), a_sum.transpose(1, 0, 2)),
+    )
+    h_in = h_in.transpose(1, 0, 2, 3, 4)  # [B,nc,nh,P,N]
+
+    # inter-chunk contribution
+    decay_in = jnp.exp(cs)  # decay from chunk start to each position
+    y_off = jnp.einsum("bcqn,bchpn,bchq->bcqhp", Cc, h_in, decay_in)
+
+    y = (y_diag + y_off).reshape(Bsz, Tp, nh, P)[:, :T]
+    y = y + D[None, None, :, None] * x[:, :T]
+    return y, h_last
+
+
+# ---------------------------------------------------------------------------
+# full mixer
+# ---------------------------------------------------------------------------
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    di, N, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : 2 * di + 2 * N]
+    dt = zxbcdt[..., 2 * di + 2 * N :]
+    return z, xBC, dt
+
+
+def mamba_apply(cfg: ModelConfig, p: dict, u, cache=None):
+    """u: [B,T,d] -> [B,T,d].  If cache given (prefill), returns new cache."""
+    Bsz, T, _ = u.shape
+    di, N, nh, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = u @ p["in_proj"]
+    z, xBC_pre, dt_raw = _split_proj(cfg, zxbcdt)
+    xBC = jax.nn.silu(_causal_conv(xBC_pre, p["conv_w"], p["conv_b"]))
+    x = xBC[..., :di].reshape(Bsz, T, nh, P).astype(jnp.float32)
+    Bm = xBC[..., di : di + N].astype(jnp.float32)
+    Cm = xBC[..., di + N :].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, h_last = ssd_chunked(x, dt, A, Bm, Cm, p["D"], cfg.ssm_chunk)
+    y = y.reshape(Bsz, T, di).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"])
+    out = y @ p["out_proj"]
+    new_cache = None
+    if cache is not None:
+        K = cfg.ssm_conv
+        tail = xBC_pre[:, -(K - 1):]  # pre-conv stream feeds the decode conv
+        pad = (K - 1) - tail.shape[1]
+        if pad > 0:
+            tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+        new_cache = {"conv": tail.astype(cfg.jdtype), "ssm": h_last}
+    return out, new_cache
+
+
+def mamba_step(cfg: ModelConfig, p: dict, u, cache):
+    """u: [B,1,d], cache: {conv [B,K-1,ch], ssm [B,nh,P,N]} -> (out, cache)."""
+    Bsz = u.shape[0]
+    di, N, nh, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = u[:, 0] @ p["in_proj"]  # [B, ...]
+    z, xBC, dt_raw = _split_proj(cfg, zxbcdt[:, None])
+    z, xBC, dt_raw = z[:, 0], xBC[:, 0], dt_raw[:, 0]
+
+    conv_in = jnp.concatenate([cache["conv"].astype(jnp.float32),
+                               xBC[:, None].astype(jnp.float32)], axis=1)
+    xBC_c = jnp.einsum("bkc,kc->bc", conv_in, p["conv_w"].astype(jnp.float32))
+    xBC_c = jax.nn.silu(xBC_c + p["conv_b"].astype(jnp.float32))
+
+    x = xBC_c[:, :di].reshape(Bsz, nh, P)
+    Bm = xBC_c[:, di : di + N]
+    Cm = xBC_c[:, di + N :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,nh]
+    A = -jnp.exp(p["A_log"])
+
+    h = cache["ssm"]
+    decay = jnp.exp(dt * A[None, :])
+    h = h * decay[..., None, None] + jnp.einsum("bhp,bn,bh->bhpn", x, Bm, dt)
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm) + p["D"][None, :, None] * x
+    y = y.reshape(Bsz, di).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"])
+    out = (y @ p["out_proj"])[:, None]
+    new_conv = jnp.concatenate([cache["conv"][:, 1:], xBC[:, None].astype(cfg.jdtype)], axis=1)
+    return out, {"conv": new_conv, "ssm": h}
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int) -> dict:
+    di, N = cfg.d_inner, cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * N), cfg.jdtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                         jnp.float32),
+    }

@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamW, adamw, apply_updates, cosine_schedule
+from repro.optim.compression import compress_gradients, error_feedback_update

@@ -1,0 +1,127 @@
+"""AdamW — pure-JAX, sharding-transparent, with optional int8 moment state.
+
+The quantized-moment option carries the paper's theme (8-bit everything,
+requantize between steps) into the optimizer: m and v are stored as
+block-wise int8 with per-block scales (bitsandbytes-style), cutting optimizer
+HBM from 8 to ~2.03 bytes/param — the difference between arctic-480b fitting
+a 16 GB/chip pod or not (see EXPERIMENTS.md §Dry-run).
+
+State layout: moments are stored as flat tuples aligned with
+``jax.tree.leaves(params)`` — no structure surgery, checkpoint/shard friendly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW", "adamw", "apply_updates", "cosine_schedule", "MomentState"]
+
+def _q8_pack(x: jax.Array) -> "MomentState":
+    """f32 -> int8 with per-channel (last-axis) f32 scales.
+
+    Shape-preserving on purpose: a flatten-into-blocks layout (bitsandbytes
+    style) reshapes across sharding boundaries and GSPMD responds by
+    replicating the full f32 working copy — measured as 625 GB/device
+    buffers on arctic-480b's stacked expert moments.  Per-channel absmax is
+    elementwise+reduce only, so the quantized state and every optimizer
+    intermediate inherit the parameter's sharding unchanged.
+    """
+    if x.ndim == 0:
+        return MomentState(
+            jnp.zeros((), jnp.int8), x.astype(jnp.float32)[None])
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return MomentState(q, scale.astype(jnp.float32))
+
+
+def _q8_unpack(ms: "MomentState", shape) -> jax.Array:
+    if len(shape) == 0:
+        return ms.scale[0]
+    return ms.q.astype(jnp.float32) * ms.scale
+
+
+class MomentState(NamedTuple):
+    q: jax.Array
+    scale: jax.Array
+
+
+def _moment_zero(p, quantized: bool):
+    if quantized:
+        return _q8_pack(jnp.zeros(p.shape, jnp.float32))
+    return jnp.zeros(p.shape, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    quantize_moments: bool = False
+
+    def init(self, params) -> dict:
+        leaves = jax.tree.leaves(params)
+        return {
+            "m": tuple(_moment_zero(p, self.quantize_moments) for p in leaves),
+            "v": tuple(_moment_zero(p, self.quantize_moments) for p in leaves),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads, state, params):
+        count = state["count"] + 1
+        lr = self.lr(count) if callable(self.lr) else self.lr
+
+        g_leaves, treedef = jax.tree.flatten(grads)
+        p_leaves = jax.tree.leaves(params)
+
+        if self.grad_clip > 0:
+            gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                                 for g in g_leaves))
+            cscale = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gnorm, 1e-12))
+            g_leaves = [g * cscale.astype(g.dtype) for g in g_leaves]
+
+        bc1 = 1.0 - self.b1 ** count.astype(jnp.float32)
+        bc2 = 1.0 - self.b2 ** count.astype(jnp.float32)
+
+        updates, new_m, new_v = [], [], []
+        for g, m, v, p in zip(g_leaves, state["m"], state["v"], p_leaves):
+            g = g.astype(jnp.float32)
+            mf = _q8_unpack(m, g.shape) if isinstance(m, MomentState) else m
+            vf = _q8_unpack(v, g.shape) if isinstance(v, MomentState) else v
+            mf = self.b1 * mf + (1 - self.b1) * g
+            vf = self.b2 * vf + (1 - self.b2) * jnp.square(g)
+            step = (mf / bc1) / (jnp.sqrt(vf / bc2) + self.eps)
+            step = step + self.weight_decay * p.astype(jnp.float32)
+            updates.append((-lr * step).astype(p.dtype))
+            new_m.append(_q8_pack(mf) if isinstance(m, MomentState) else mf)
+            new_v.append(_q8_pack(vf) if isinstance(v, MomentState) else vf)
+
+        return (
+            jax.tree.unflatten(treedef, updates),
+            {"m": tuple(new_m), "v": tuple(new_v), "count": count},
+        )
+
+
+def adamw(**kw) -> AdamW:
+    return AdamW(**kw)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def cosine_schedule(peak: float, warmup: int, total: int, floor: float = 0.1):
+    def sched(count):
+        c = count.astype(jnp.float32)
+        warm = c / max(warmup, 1)
+        prog = jnp.clip((c - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak * jnp.where(c < warmup, warm, cos)
+
+    return sched

@@ -1,0 +1,77 @@
+"""Gradient compression for cross-pod all-reduce (distributed-optimization).
+
+int8 quantization with *error feedback* (Seide et al. / EF-SGD): the
+quantization residual is carried into the next step, so compression bias
+vanishes over time.  The compressed representation is what crosses the DCI
+between pods — 4x fewer bytes than f32 on the slowest link.
+
+Usage in the train loop:
+    cg, new_ef = compress_gradients(grads, ef_state)    # before all-reduce
+    grads = decompress(cg)                              # after all-reduce
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CompressedGrads", "compress_gradients", "decompress",
+           "error_feedback_update", "ef_init"]
+
+QBLOCK = 512
+
+
+class CompressedGrads(NamedTuple):
+    q: jax.Array  # int8 blocks
+    scale: jax.Array  # f32 per-block
+
+
+def _compress_leaf(g: jax.Array, ef: jax.Array):
+    gf = g.astype(jnp.float32) + ef
+    flat = gf.reshape(-1)
+    pad = (-flat.shape[0]) % QBLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, QBLOCK)
+    scale = jnp.maximum(jnp.max(jnp.abs(blocks), -1, keepdims=True) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    recon = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = gf.size
+    new_ef = (gf.reshape(-1) - recon[:n]).reshape(g.shape)
+    return CompressedGrads(q, scale.astype(jnp.float32)), new_ef
+
+
+def ef_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_gradients(grads, ef_state):
+    """Returns (compressed tree, new error-feedback tree)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    ef_leaves = jax.tree.leaves(ef_state)
+    cs, efs = [], []
+    for g, e in zip(leaves, ef_leaves):
+        c, ne = _compress_leaf(g, e)
+        cs.append(c)
+        efs.append(ne)
+    return jax.tree.unflatten(treedef, cs), jax.tree.unflatten(treedef, efs)
+
+
+def decompress(compressed, shapes_like):
+    def leaf(c, g):
+        flat = (c.q.astype(jnp.float32) * c.scale).reshape(-1)
+        return flat[: g.size].reshape(g.shape).astype(g.dtype)
+
+    return jax.tree.map(
+        leaf, compressed, shapes_like,
+        is_leaf=lambda x: isinstance(x, CompressedGrads),
+    )
+
+
+def error_feedback_update(grads, ef_state):
+    """One combined compress->decompress round (what a fused collective does);
+    returns (effective grads, new ef state)."""
+    comp, new_ef = compress_gradients(grads, ef_state)
+    eff = decompress(comp, grads)
+    return eff, new_ef

@@ -1,0 +1,4 @@
+from repro.quant.ptq import (
+    CalibrationStats, calibrate, quantize_lm_params, QuantizedLinear,
+    quantized_matmul, bitserial_linear,
+)

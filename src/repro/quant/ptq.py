@@ -1,0 +1,179 @@
+"""Post-training quantization — the paper's pipeline as a TPU-native flow.
+
+Neural Cache's execution model is: all layer I/O is uint8, weights are 8-bit
+stationary in the arrays, partial sums are wide (24/32-bit), and each
+layer's outputs are requantized from layer-wise min/max with a scalar fixup
+from the CPU.  On TPU this becomes:
+
+  * weights: per-channel symmetric int8 (scales absorbed into the epilogue),
+  * activations: per-tensor affine uint8 from calibration min/max,
+  * GEMM: int8 x int8 -> int32 on the MXU (kernels/quant_matmul.py fuses the
+    dequant epilogue in VMEM — the "never leave the array" insight),
+  * sub-8-bit weights: bit-plane decomposition (kernels/bitserial_matmul.py)
+    whose cost scales with the number of planes, i.e. the paper's
+    precision-proportional latency, with all-zero planes skipped at pack
+    time (beyond-paper optimization).
+
+``calibrate`` runs the fp model on sample batches collecting per-site
+min/max (the paper's in-cache min/max reduction); ``quantize_lm_params``
+converts a trained LM param tree; ``QuantizedLinear``/``quantized_matmul``
+are the serving-path ops.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import (
+    QuantParams, choose_qparams, choose_qparams_symmetric, quantize,
+    quantize_per_channel,
+)
+from repro.kernels import ops as K
+from repro.kernels import ref as KR
+
+__all__ = [
+    "CalibrationStats", "calibrate", "quantize_lm_params",
+    "QuantizedLinear", "quantized_matmul", "bitserial_linear",
+]
+
+
+# ---------------------------------------------------------------------------
+# calibration
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class CalibrationStats:
+    """Running min/max per named site (EMA like TF-Lite's calibrator)."""
+
+    momentum: float = 0.9
+    mins: dict[str, jax.Array] = dataclasses.field(default_factory=dict)
+    maxs: dict[str, jax.Array] = dataclasses.field(default_factory=dict)
+
+    def observe(self, name: str, x: jax.Array) -> None:
+        mn = jnp.min(x).astype(jnp.float32)
+        mx = jnp.max(x).astype(jnp.float32)
+        if name in self.mins:
+            m = self.momentum
+            self.mins[name] = m * self.mins[name] + (1 - m) * mn
+            self.maxs[name] = m * self.maxs[name] + (1 - m) * mx
+        else:
+            self.mins[name] = mn
+            self.maxs[name] = mx
+
+    def qparams(self, name: str, bits: int = 8) -> QuantParams:
+        return choose_qparams(self.mins[name], self.maxs[name], bits=bits)
+
+
+def calibrate(apply_fn: Callable[..., Any], batches, stats: CalibrationStats,
+              observe_sites: Callable[[CalibrationStats, Any, Any], None]):
+    """Run ``apply_fn`` over ``batches``; the caller's ``observe_sites``
+    records the tensors it cares about.  Returns the stats (mutated)."""
+    for batch in batches:
+        out = apply_fn(batch)
+        observe_sites(stats, batch, out)
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# weight conversion
+# ---------------------------------------------------------------------------
+def _is_linear_leaf(path: str, x) -> bool:
+    name = path.rsplit("/", 1)[-1]
+    return (hasattr(x, "ndim") and x.ndim >= 2
+            and name in ("wq", "wk", "wv", "wo", "wi", "wg", "embed", "head",
+                         "in_proj", "out_proj"))
+
+
+def quantize_lm_params(params: Any, bits: int = 8,
+                       skip: tuple[str, ...] = ("embed",)) -> Any:
+    """Convert matmul weights to {'q': int8, 'scale': f32-per-channel}.
+
+    Norms/biases/SSM dynamics stay fp (they're O(d) and precision-critical
+    — DESIGN.md §Arch-applicability).  ``bits < 8`` additionally returns the
+    bit-plane packing for the bit-serial kernel.
+    """
+
+    def leaf(path, x):
+        p = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path)
+        name = p.rsplit("/", 1)[-1]
+        if not _is_linear_leaf(p, x) or name in skip:
+            return x
+        q, scale = quantize_per_channel(x.astype(jnp.float32), axis=-1,
+                                        bits=bits)
+        if x.ndim == 2:  # kernel convention: w_scale is [N]
+            scale = scale.reshape(-1)
+        out = {"q": q.astype(jnp.int8), "scale": scale.astype(jnp.float32)}
+        if bits < 8:
+            out["planes"] = K.pack_weights(q.astype(jnp.int32), bits)
+        return out
+
+    return jax.tree_util.tree_map_with_path(leaf, params)
+
+
+# ---------------------------------------------------------------------------
+# serving-path ops
+# ---------------------------------------------------------------------------
+def quantized_matmul(x: jax.Array, wq: dict, x_qp: QuantParams | None = None,
+                     prefer_pallas: bool = False) -> jax.Array:
+    """x (fp) @ quantized weight -> fp.
+
+    With ``x_qp`` the activation is quantized to int8 first and the GEMM
+    runs W8A8 through the fused kernel (the paper path); without it the
+    weight is dequantized on the fly (weight-only quantization).
+    """
+    if x_qp is None:
+        w = wq["q"].astype(x.dtype) * wq["scale"].astype(x.dtype)
+        return x @ w
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    xq, zp = _to_int8(quantize(x2, x_qp), x_qp)
+    y = K.quant_matmul(xq, wq["q"], jnp.float32(x_qp.scale), wq["scale"],
+                       prefer_pallas=prefer_pallas)
+    # exact affine correction: x = s*(q - zp)  =>
+    # x @ W = s*sw*(q @ qw) - s*zp*sw*colsum(qw)
+    y = y + _zp_correction(wq, x_qp.scale, zp)
+    return y.reshape(*lead, -1).astype(x.dtype)
+
+
+def _to_int8(q, x_qp: QuantParams):
+    """uint8 [0,255] -> int8 [-128,127] by re-centering (kernels are int8);
+    the shifted zero point keeps the affine math exact."""
+    if x_qp.signed:
+        return q.astype(jnp.int8), x_qp.zero_point
+    return ((q.astype(jnp.int32) - 128).astype(jnp.int8),
+            x_qp.zero_point - 128)
+
+
+def _zp_correction(wq, scale, zp, plane_axis: int = 0):
+    qw = wq["q"].astype(jnp.int32)
+    colsum = jnp.sum(qw, axis=0).astype(jnp.float32)
+    return -(jnp.float32(scale) * zp) * colsum * wq["scale"].reshape(-1)
+
+
+def bitserial_linear(x: jax.Array, wq: dict, x_qp: QuantParams,
+                     prefer_pallas: bool = False) -> jax.Array:
+    """Sub-8-bit path: plane-decomposed GEMM (precision-proportional cost)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    xq, zp = _to_int8(quantize(x2, x_qp), x_qp)
+    y = K.bitserial_matmul(xq, wq["planes"], jnp.float32(x_qp.scale),
+                           wq["scale"], prefer_pallas=prefer_pallas)
+    y = y + _zp_correction(wq, x_qp.scale, zp)
+    return y.reshape(*lead, -1).astype(x.dtype)
+
+
+@dataclasses.dataclass
+class QuantizedLinear:
+    """A linear layer bound to its calibrated activation qparams."""
+
+    wq: dict
+    x_qp: QuantParams | None = None
+    bits: int = 8
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        if self.bits < 8 and "planes" in self.wq and self.x_qp is not None:
+            return bitserial_linear(x, self.wq, self.x_qp)
+        return quantized_matmul(x, self.wq, self.x_qp)

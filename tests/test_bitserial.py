@@ -1,0 +1,185 @@
+"""Bit-exactness + cycle-formula tests for the in-SRAM arithmetic emulation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitserial as bs
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _rand(rng, n_bits, shape):
+    return rng.integers(0, 1 << n_bits, size=shape, dtype=np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# pack / unpack roundtrip
+# ---------------------------------------------------------------------------
+@given(
+    n_bits=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_pack_unpack_roundtrip(n_bits, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, n_bits, (17,))
+    planes = bs.bitplane_pack(jnp.asarray(x), n_bits)
+    assert planes.shape == (n_bits, 17)
+    back = np.asarray(bs.bitplane_unpack(planes))
+    np.testing.assert_array_equal(back, x)
+
+
+def test_pack_unpack_signed():
+    x = jnp.asarray([-128, -1, 0, 1, 127], jnp.int32)
+    planes = bs.bitplane_pack(x.astype(jnp.uint32) & 0xFF, 8)
+    back = np.asarray(bs.bitplane_unpack(planes, signed=True))
+    np.testing.assert_array_equal(back, np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# addition (§III-B): bit-exact, n+1 cycles
+# ---------------------------------------------------------------------------
+@given(
+    n_bits=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_add_exact(n_bits, seed):
+    rng = np.random.default_rng(seed)
+    a, b = _rand(rng, n_bits, (64,)), _rand(rng, n_bits, (64,))
+    pa, pb = bs.bitplane_pack(jnp.asarray(a), n_bits), bs.bitplane_pack(jnp.asarray(b), n_bits)
+    out, cycles = bs.bitserial_add(pa, pb)
+    assert cycles == n_bits + 1
+    assert out.shape[0] == n_bits + 1
+    np.testing.assert_array_equal(np.asarray(bs.bitplane_unpack(out)), a.astype(np.uint64) + b)
+
+
+def test_add_mixed_width():
+    pa = bs.bitplane_pack(jnp.asarray([250, 3], jnp.uint32), 8)
+    pb = bs.bitplane_pack(jnp.asarray([7, 1], jnp.uint32), 3)
+    out, cycles = bs.bitserial_add(pa, pb)
+    np.testing.assert_array_equal(np.asarray(bs.bitplane_unpack(out)), [257, 4])
+    assert cycles == 9
+
+
+# ---------------------------------------------------------------------------
+# subtraction: two's complement, sign plane correct
+# ---------------------------------------------------------------------------
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_sub_exact(seed):
+    rng = np.random.default_rng(seed)
+    a, b = _rand(rng, 8, (64,)), _rand(rng, 8, (64,))
+    pa, pb = bs.bitplane_pack(jnp.asarray(a), 8), bs.bitplane_pack(jnp.asarray(b), 8)
+    out, cycles = bs.bitserial_sub(pa, pb)
+    got = np.asarray(bs.bitplane_unpack(out, signed=True))
+    np.testing.assert_array_equal(got, a.astype(np.int64) - b.astype(np.int64))
+    assert cycles == 9
+
+
+# ---------------------------------------------------------------------------
+# multiplication (§III-C): bit-exact, n^2+5n-2 cycles
+# ---------------------------------------------------------------------------
+@given(
+    n_bits=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_mul_exact(n_bits, seed):
+    rng = np.random.default_rng(seed)
+    a, b = _rand(rng, n_bits, (32,)), _rand(rng, n_bits, (32,))
+    pa, pb = bs.bitplane_pack(jnp.asarray(a), n_bits), bs.bitplane_pack(jnp.asarray(b), n_bits)
+    out, cycles = bs.bitserial_multiply(pa, pb)
+    assert cycles == n_bits * n_bits + 5 * n_bits - 2
+    assert out.shape[0] == 2 * n_bits
+    np.testing.assert_array_equal(
+        np.asarray(bs.bitplane_unpack(out)), a.astype(np.uint64) * b.astype(np.uint64)
+    )
+
+
+def test_mul_paper_example_cycles():
+    # §III-C: 8-bit multiply = 102 cycles; §VI-A quotes 236 cycles per 8-bit MAC
+    assert bs.mul_cycles(8) == 102
+    card = bs.OpCycles()
+    assert card.mac_floor == 102 + 25
+    assert card.mac8 == 236
+    assert card.mac_overhead == 236 - 127
+
+
+# ---------------------------------------------------------------------------
+# MAC: acc += a*b with fixed accumulator width
+# ---------------------------------------------------------------------------
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_mac_exact(seed):
+    rng = np.random.default_rng(seed)
+    a, b = _rand(rng, 8, (16,)), _rand(rng, 8, (16,))
+    acc0 = _rand(rng, 20, (16,))
+    acc = bs.bitplane_pack(jnp.asarray(acc0), 24)
+    pa, pb = bs.bitplane_pack(jnp.asarray(a), 8), bs.bitplane_pack(jnp.asarray(b), 8)
+    out, _ = bs.bitserial_mac(acc, pa, pb)
+    want = (acc0.astype(np.uint64) + a.astype(np.uint64) * b) % (1 << 24)
+    np.testing.assert_array_equal(np.asarray(bs.bitplane_unpack(out)), want)
+
+
+# ---------------------------------------------------------------------------
+# reduction (§III-D): log-tree, exact sum, widening widths
+# ---------------------------------------------------------------------------
+@given(
+    k=st.integers(2, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_reduce_exact(k, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, 8, (k,))
+    planes = bs.bitplane_pack(jnp.asarray(x), 8)
+    out, cycles = bs.bitserial_reduce(planes)
+    assert out.shape[-1] == 1
+    got = int(np.asarray(bs.bitplane_unpack(out))[0])
+    assert got == int(x.astype(np.uint64).sum())
+    assert cycles == bs.reduce_cycles(k, 8)
+
+
+def test_reduce_cycles_growth():
+    # each of the log2(k) steps costs (move w) + (add w+1) with w growing by 1
+    assert bs.reduce_cycles(2, 8) == 8 + 9
+    assert bs.reduce_cycles(4, 8) == (8 + 9) + (9 + 10)
+    assert bs.reduce_cycles(32, 8) == sum((8 + i) + (9 + i) for i in range(5))
+
+
+# ---------------------------------------------------------------------------
+# predicated ops: ReLU / max (§IV-D)
+# ---------------------------------------------------------------------------
+def test_relu():
+    vals = jnp.asarray([-120, -1, 0, 5, 127], jnp.int32)
+    planes = bs.bitplane_pack(vals.astype(jnp.uint32) & 0xFF, 8)
+    out, _ = bs.bitserial_relu(planes)
+    got = np.asarray(bs.bitplane_unpack(out, signed=True))
+    np.testing.assert_array_equal(got, np.maximum(np.asarray(vals), 0))
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_max(seed):
+    rng = np.random.default_rng(seed)
+    a, b = _rand(rng, 8, (33,)), _rand(rng, 8, (33,))
+    pa, pb = bs.bitplane_pack(jnp.asarray(a), 8), bs.bitplane_pack(jnp.asarray(b), 8)
+    out, _ = bs.bitserial_max(pa, pb)
+    np.testing.assert_array_equal(np.asarray(bs.bitplane_unpack(out))[: len(a)], np.maximum(a, b))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end dot product through the array
+# ---------------------------------------------------------------------------
+@given(k=st.sampled_from([4, 9, 16, 32]), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_dot(k, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, 8, (k,))
+    w = _rand(rng, 8, (k,))
+    got, cycles = bs.bitserial_dot(jnp.asarray(x), jnp.asarray(w))
+    assert int(got) == int((x.astype(np.uint64) * w).sum())
+    assert cycles > 0

@@ -1,0 +1,214 @@
+"""Sharding rules, roofline math, checkpointing, data pipeline."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY, get_config
+from repro.configs.base import SHAPES, ShapeSpec
+from repro.distributed.hlo_analysis import collective_bytes
+from repro.distributed.roofline import TPU_V5E, model_flops, roofline
+from repro.distributed.sharding import (
+    ShardingReport, _batch_spec, plan_parallelism, spec_for_param)
+
+
+class FakeMesh:
+    """Mesh stand-in: axis names + shape only (rules never touch devices)."""
+
+    def __init__(self, shape, axes):
+        self.axis_names = axes
+        self.devices = np.empty(shape)
+
+
+MESH = FakeMesh((16, 16), ("data", "model"))
+MESH3 = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+def test_attention_weights_tp_sharded():
+    cfg = get_config("qwen1.5-110b")
+    spec = spec_for_param("stages/0/attn/wq", (80, 8192, 8192), cfg, MESH)
+    assert tuple(spec) == (None, "data", "model")
+    spec = spec_for_param("stages/0/attn/wo", (80, 8192, 8192), cfg, MESH)
+    assert tuple(spec) == (None, "model", "data")
+
+
+def test_indivisible_head_dim_falls_back():
+    cfg = get_config("qwen2-7b")  # 28 heads * 128 = 3584 % 16 = 0 -> ok
+    r = ShardingReport()
+    spec = spec_for_param("stages/0/attn/wq", (28, 3584, 3585), cfg, MESH, r)
+    assert tuple(spec)[-1] is None  # 3585 % 16 != 0 -> replicated + logged
+    assert r.fallbacks
+
+
+def test_moe_expert_sharding():
+    cfg = get_config("arctic-480b")
+    spec = spec_for_param("stages/0/moe/wi", (35, 128, 7168, 4864), cfg, MESH)
+    assert tuple(spec) == (None, "model", "data", None)
+
+
+def test_embed_head_vocab_sharding():
+    cfg = get_config("olmo-1b")
+    assert tuple(spec_for_param("embed", (50304, 2048), cfg, MESH)) == \
+        ("model", "data")
+    assert tuple(spec_for_param("head", (2048, 50304), cfg, MESH)) == \
+        ("data", "model")
+
+
+def test_norms_replicated():
+    cfg = get_config("olmo-1b")
+    assert tuple(spec_for_param("stages/0/norm1/w", (16, 2048), cfg, MESH)) \
+        == (None, None)
+
+
+# ---------------------------------------------------------------------------
+# parallelism plan / batch specs
+# ---------------------------------------------------------------------------
+def test_plan_modes():
+    assert plan_parallelism(get_config("olmo-1b")) == "fsdp"
+    assert plan_parallelism(get_config("qwen1.5-110b")) == "tp"
+    assert plan_parallelism(get_config("arctic-480b")) == "ep"
+    assert plan_parallelism(get_config("mamba2-2.7b")) == "fsdp"
+
+
+def test_batch_spec_preference_order():
+    # fsdp: batch 256 on 16x16 -> both axes
+    assert _batch_spec(256, MESH, None, "t", "fsdp") == ("data", "model")
+    # tp: never puts batch on model (single axis returned bare)
+    assert _batch_spec(256, MESH, None, "t", "tp") == "data"
+    # indivisible by full product -> next candidate
+    assert _batch_spec(128, MESH, None, "t", "fsdp") == "data"
+    # multi-pod fsdp
+    assert _batch_spec(512, MESH3, None, "t", "fsdp") == \
+        ("pod", "data", "model")
+    assert _batch_spec(256, MESH3, None, "t", "fsdp") == ("pod", "data")
+
+
+# ---------------------------------------------------------------------------
+# roofline
+# ---------------------------------------------------------------------------
+def test_model_flops_rules():
+    cfg = get_config("olmo-1b")
+    tr = SHAPES["train_4k"]
+    assert model_flops(cfg, tr) == pytest.approx(
+        6 * cfg.param_count() * tr.global_batch * tr.seq_len)
+    de = SHAPES["decode_32k"]
+    assert model_flops(cfg, de) == pytest.approx(
+        2 * cfg.param_count() * de.global_batch)
+    moe = get_config("arctic-480b")
+    assert moe.active_param_count() < 0.2 * moe.param_count()
+
+
+def test_roofline_terms_and_dominance():
+    cfg = get_config("olmo-1b")
+    spec = SHAPES["train_4k"]
+    from repro.distributed.hlo_analysis import CollectiveStats
+    coll = CollectiveStats(wire_bytes={"all-reduce": 819e9})  # 1s of HBM bw
+    rep = roofline("olmo-1b", "train_4k", "m", 256,
+                   {"flops": 197e12, "bytes accessed": 819e9 / 2},
+                   coll, cfg, spec)
+    assert rep.t_compute == pytest.approx(1.0)
+    assert rep.t_memory == pytest.approx(0.5)
+    assert rep.t_collective == pytest.approx(819e9 / 50e9)
+    assert rep.dominant == "collective"
+    assert 0 < rep.roofline_fraction < 1
+
+
+# ---------------------------------------------------------------------------
+# collective text parser
+# ---------------------------------------------------------------------------
+def test_collective_parser_counts_and_wire_factors():
+    hlo = """
+  %ag = bf16[16,1024]{1,0} all-gather(%x), replica_groups=[16,16]<=[256]
+  %ar.start = f32[4,4]{1,0} all-reduce-start(%y), replica_groups={{0,1}}
+  %ar.done = f32[4,4]{1,0} all-reduce-done(%ar.start)
+  %cp = u8[100]{0} collective-permute(%z), source_target_pairs={{0,1}}
+"""
+    st = collective_bytes(hlo)
+    assert st.ops == {"all-gather": 1, "all-reduce": 1,
+                      "collective-permute": 1}
+    assert st.operand_bytes["all-gather"] == 16 * 1024 * 2
+    # ring wire: AG moves (n-1)/n of output, AR 2(n-1)/n, permute 1x
+    assert st.wire_bytes["all-gather"] == pytest.approx(
+        16 * 1024 * 2 * 15 / 16)
+    assert st.wire_bytes["all-reduce"] == pytest.approx(64 * 2 * 1 / 2)
+    assert st.wire_bytes["collective-permute"] == 100
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+def test_data_deterministic_and_checkpointable():
+    from repro.data import DataIterator, SyntheticLMDataset
+    ds = SyntheticLMDataset(vocab_size=256, seq_len=64, global_batch=8,
+                            seed=3)
+    a = ds.host_batch(5)
+    b = ds.host_batch(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+    it = DataIterator(ds)
+    first = next(it)
+    state = it.state_dict()
+    second = next(it)
+    it2 = DataIterator(ds)
+    it2.load_state_dict(state)
+    resumed = next(it2)
+    np.testing.assert_array_equal(np.asarray(second["tokens"]),
+                                  np.asarray(resumed["tokens"]))
+
+
+def test_data_host_sharding_partitions_batch():
+    from repro.data import SyntheticLMDataset
+    ds = SyntheticLMDataset(vocab_size=128, seq_len=32, global_batch=8)
+    full_rows = [ds.host_batch(0, h, 4)["tokens"] for h in range(4)]
+    assert all(r.shape == (2, 32) for r in full_rows)
+    # different hosts draw different rows
+    assert not np.array_equal(full_rows[0], full_rows[1])
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip_and_latest(tmp_path):
+    from repro.checkpoint import (latest_step, restore_checkpoint,
+                                  save_checkpoint)
+    tree = {"w": jnp.arange(6.0).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.int32)}}
+    save_checkpoint(tmp_path, 10, {"params": tree}, extras={"k": 1})
+    save_checkpoint(tmp_path, 20, {"params": tree})
+    assert latest_step(tmp_path) == 20
+    step, out, extras = restore_checkpoint(tmp_path, {"params": tree},
+                                           step=10)
+    assert step == 10 and extras == {"k": 1}
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]),
+                                  np.asarray(tree["w"]))
+
+
+def test_checkpoint_async_and_gc(tmp_path):
+    from repro.checkpoint import AsyncCheckpointer, latest_step
+    ck = AsyncCheckpointer(tmp_path, keep=2)
+    tree = {"w": jnp.zeros((8,))}
+    for s in (1, 2, 3, 4):
+        ck.save(s, {"params": tree})
+    ck.wait()
+    assert latest_step(tmp_path) == 4
+    import pathlib
+    steps = sorted(p.name for p in pathlib.Path(tmp_path).iterdir())
+    assert "step_1" not in steps and "step_2" not in steps
+
+
+def test_checkpoint_structure_mismatch_raises(tmp_path):
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+    save_checkpoint(tmp_path, 1, {"params": {"w": jnp.zeros((2,))}})
+    with pytest.raises(ValueError, match="leaves"):
+        restore_checkpoint(
+            tmp_path, {"params": {"w": jnp.zeros((2,)),
+                                  "extra": jnp.zeros((1,))}})

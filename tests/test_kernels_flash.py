@@ -1,0 +1,61 @@
+"""Pallas flash attention vs the naive oracle — shape/dtype/GQA sweeps."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels import ref
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize("B,H,Hkv,Tq,Tk,D", [
+    (1, 4, 4, 256, 256, 64),       # MHA square
+    (2, 8, 2, 256, 512, 64),       # GQA, rectangular
+    (1, 2, 1, 512, 512, 128),      # MQA, bigger head
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_oracle(B, H, Hkv, Tq, Tk, D, causal):
+    if causal and Tq != Tk:
+        pytest.skip("causal oracle assumes aligned ends")
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = _rand(ks[0], (B, H, Tq, D), jnp.float32)
+    k = _rand(ks[1], (B, Hkv, Tk, D), jnp.float32)
+    v = _rand(ks[2], (B, Hkv, Tk, D), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_dtypes(dtype):
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = _rand(ks[0], (1, 2, 256, 64), dtype)
+    k = _rand(ks[1], (1, 2, 256, 64), dtype)
+    v = _rand(ks[2], (1, 2, 256, 64), dtype)
+    out = flash_attention(q, k, v, interpret=True)
+    want = ref.flash_attention_ref(q.astype(jnp.float32),
+                                   k.astype(jnp.float32),
+                                   v.astype(jnp.float32))
+    assert out.dtype == dtype
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want), rtol=tol, atol=tol)
+
+
+def test_flash_tile_shapes_sweep():
+    ks = jax.random.split(jax.random.key(2), 3)
+    q = _rand(ks[0], (1, 2, 512, 64), jnp.float32)
+    k = _rand(ks[1], (1, 2, 512, 64), jnp.float32)
+    v = _rand(ks[2], (1, 2, 512, 64), jnp.float32)
+    want = ref.flash_attention_ref(q, k, v)
+    for bq, bk in [(128, 128), (256, 128), (128, 512), (512, 512)]:
+        out = flash_attention(q, k, v, bq=bq, bk=bk, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4, err_msg=f"{bq},{bk}")

@@ -1,0 +1,154 @@
+"""Per-architecture smoke tests (reduced configs) + decode consistency.
+
+Every assigned arch: one forward/train step on CPU asserting output shapes +
+no NaNs, and the strongest end-to-end check we have — prefill + decode_step
+must reproduce the full-forward logits at the next position.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduced_config, shapes_for
+from repro.models import frontends as F
+from repro.models import transformer as T
+
+
+@pytest.fixture(scope="module")
+def rigs():
+    out = {}
+    for name in ARCH_IDS:
+        cfg = reduced_config(get_config(name))
+        params = T.init_lm(cfg, jax.random.PRNGKey(0))
+        out[name] = (cfg, params)
+    return out
+
+
+def _inputs(cfg, key, B, S):
+    if cfg.family == "vlm":
+        return None, F.stub_embeddings(cfg, key, B, S)
+    return F.stub_tokens(cfg, key, B, S), None
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_forward_smoke(rigs, name):
+    cfg, params = rigs[name]
+    key = jax.random.PRNGKey(1)
+    tokens, embeds = _inputs(cfg, key, 2, 64)
+    hidden, _ = T.lm_apply(cfg, params, tokens, embeds=embeds)
+    assert hidden.shape == (2, 64, cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(hidden)))
+    logits = T.lm_logits(cfg, params, hidden[:, -1])
+    assert logits.shape == (2, cfg.vocab_size)
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_train_step_smoke(rigs, name):
+    """One loss+grad step: finite loss, grads exist for every param."""
+    cfg, params = rigs[name]
+    key = jax.random.PRNGKey(2)
+    B, S = 2, 64
+    tokens, embeds = _inputs(cfg, key, B, S)
+    if tokens is None:
+        tokens = F.stub_tokens(cfg, key, B, S)
+        embeds = None  # vlm trains over text tokens in the smoke test
+    labels = jnp.roll(tokens, -1, axis=1)
+
+    def loss_fn(p):
+        return T.lm_loss(cfg, p, tokens, labels, loss_chunk=32)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss))
+    # random-init loss should be ~ log(vocab)
+    assert 0.2 * np.log(cfg.vocab_size) < float(loss) < 3 * np.log(cfg.vocab_size)
+    leaves = jax.tree.leaves(grads)
+    assert leaves and all(bool(jnp.all(jnp.isfinite(g))) for g in leaves)
+    assert any(float(jnp.max(jnp.abs(g))) > 0 for g in leaves)
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_decode_matches_full_forward(rigs, name):
+    cfg, params = rigs[name]
+    key = jax.random.PRNGKey(3)
+    B, S = 2, 48
+    tokens = F.stub_tokens(cfg, key, B, S + 1)
+    if cfg.family == "vlm":
+        emb = F.stub_embeddings(cfg, key, B, S)
+        tok_emb = params["embed"][tokens[:, S : S + 1]]
+        full_emb = jnp.concatenate([emb, tok_emb], axis=1)
+        hidden, _ = T.lm_apply(cfg, params, embeds=full_emb)
+        _, caches = T.prefill(cfg, params, embeds=emb, max_len=S + 1)
+    else:
+        hidden, _ = T.lm_apply(cfg, params, tokens)
+        _, caches = T.prefill(cfg, params, tokens[:, :S], max_len=S + 1)
+    want = T.lm_logits(cfg, params, hidden[:, S])
+    got, _ = T.decode_step(cfg, params, tokens[:, S : S + 1], caches, S)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_multi_step_decode(rigs, name):
+    """Four consecutive decode steps track the full forward."""
+    cfg, params = rigs[name]
+    if cfg.family == "vlm":
+        pytest.skip("vlm covered by single-step test")
+    key = jax.random.PRNGKey(4)
+    B, S, n = 2, 40, 4
+    tokens = F.stub_tokens(cfg, key, B, S + n)
+    hidden, _ = T.lm_apply(cfg, params, tokens)
+    _, caches = T.prefill(cfg, params, tokens[:, :S], max_len=S + n)
+    for i in range(n):
+        got, caches = T.decode_step(cfg, params, tokens[:, S + i : S + i + 1], caches, S + i)
+        want = T.lm_logits(cfg, params, hidden[:, S + i])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=3e-4, rtol=3e-4)
+
+
+def test_stage_plan_hymba():
+    cfg = get_config("hymba-1.5b")
+    stages = T.plan_stages(cfg)
+    spans = [(s.start, s.length, s.window) for s in stages]
+    assert spans == [(0, 1, 0), (1, 14, 1024), (15, 1, 0), (16, 15, 1024), (31, 1, 0)]
+    assert sum(s.length for s in stages) == cfg.n_layers
+
+
+def test_stage_plan_dense():
+    cfg = get_config("qwen2-7b")
+    stages = T.plan_stages(cfg)
+    assert len(stages) == 1 and stages[0].length == cfg.n_layers
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_param_count_analytic_matches_actual(rigs, name):
+    cfg, params = rigs[name]
+    actual = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    analytic = cfg.param_count()
+    assert actual == pytest.approx(analytic, rel=0.02), (actual, analytic)
+
+
+def test_full_config_param_counts():
+    """Sanity: full configs land near their advertised sizes."""
+    expect = {
+        "qwen1.5-110b": 111e9, "qwen2-7b": 7.6e9, "qwen1.5-32b": 35e9,
+        "olmo-1b": 1.2e9, "mamba2-2.7b": 2.8e9, "hymba-1.5b": 1.6e9,
+        # assignment config says 48L x 64e (the HF Moonlight-16B has 27L);
+        # we implement the assignment's numbers -> 28B total / 4.5B active
+        "moonshot-v1-16b-a3b": 28e9,
+        "arctic-480b": 482e9,
+        "musicgen-large": 2.4e9,  # decoder backbone (EnCodec/text stubs excluded)
+        "internvl2-26b": 20e9,  # LM backbone of the 26B VLM
+    }
+    for name, want in expect.items():
+        got = get_config(name).param_count()
+        assert 0.85 * want < got < 1.15 * want, (name, got, want)
+
+
+def test_shapes_for_skips_long_context_for_full_attention():
+    assert len(shapes_for(get_config("qwen2-7b"))) == 3
+    assert len(shapes_for(get_config("mamba2-2.7b"))) == 4
+    assert len(shapes_for(get_config("hymba-1.5b"))) == 4
+
+
+def test_moe_active_params():
+    cfg = get_config("moonshot-v1-16b-a3b")
+    assert cfg.active_param_count() < 0.35 * cfg.param_count()  # ~3B of 16B
