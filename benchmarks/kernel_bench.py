@@ -1,22 +1,84 @@
-"""Kernel benches: fused W8A8 and bit-serial GEMM vs fp32 XLA dot.
+"""Kernel benches: fused W8A8 and bit-serial GEMM vs fp32 XLA dot, plus the
+word-packed emulation engine.
 
 CPU wall-times are informational (TPU is the target); the structural
 result is the plane-count scaling of the bit-serial kernel — the paper's
 precision-proportional-latency property (Stripes-style) — measured as
-HLO FLOPs of the lowered kernel, which *is* hardware-portable.
+HLO FLOPs of the lowered kernel, which *is* hardware-portable.  The
+``emulation/*`` section times the packed bit-plane engine
+(core/bitserial.py + core/nc_layers.py): 32 lanes per uint32 word, one
+bitwise op per 32 lanes.
+
+Besides the printed CSV rows, every result is appended to the module-level
+``RECORDS`` list ({op, shape, us_per_call, derived}) so benchmarks/run.py
+can dump a machine-readable ``BENCH_kernels.json`` perf baseline.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import row, timed
 from repro.core.quantize import choose_qparams_symmetric, quantize, quantize_per_channel
+from repro.distributed.hlo_analysis import xla_cost_analysis
 from repro.kernels import ops as K
+
+RECORDS: list[dict] = []
+
+
+def _rec(name: str, us: float, shape: str, derived: str = "") -> str:
+    RECORDS.append({"op": name, "shape": shape, "us_per_call": round(us, 2),
+                    "derived": derived})
+    return row(name, us, derived or shape)
+
+
+def _emulation_rows():
+    """Wall-time the packed bit-plane engine on emulation-suite shapes."""
+    from repro.core import bitserial as bs
+    from repro.core import nc_layers as nc
+    from repro.core import quantize as q
+
+    out = []
+    rng = np.random.default_rng(0)
+
+    # element-wise MAC over 4096 packed lanes (128 uint32 words / plane)
+    a = rng.integers(0, 256, size=(4096,), dtype=np.uint32)
+    b = rng.integers(0, 256, size=(4096,), dtype=np.uint32)
+    pa, pb = bs.bitplane_pack(a, 8), bs.bitplane_pack(b, 8)
+    acc = np.zeros((24, 4096), np.uint8)
+    _, us = timed(lambda: bs.bitserial_mac(acc, pa, pb))
+    out.append(_rec("emulation/mac8_4096lanes", us, "4096 lanes x 8b MAC",
+                    "packed words: 128 uint32/plane"))
+
+    # log-tree reduction of 4096 lanes of 24-bit partial sums
+    planes = bs.bitplane_pack(rng.integers(0, 1 << 16, size=(4096,),
+                                           dtype=np.uint32), 24)
+    _, us = timed(lambda: bs.bitserial_reduce(planes))
+    out.append(_rec("emulation/reduce_4096lanes", us, "4096 -> 1, 24b",
+                    f"{bs.reduce_cycles(4096, 24)} modeled cycles"))
+
+    # full conv layer through the array model (all pixels/filters in lockstep)
+    x = rng.normal(size=(14, 14, 8)).astype(np.float32)
+    w = rng.normal(size=(3, 3, 8, 16)).astype(np.float32) * 0.5
+    x_qp = q.choose_qparams(jnp.float32(x.min()), jnp.float32(x.max()))
+    w_qp = q.choose_qparams(jnp.float32(w.min()), jnp.float32(w.max()))
+    _, us = timed(lambda: nc.nc_conv2d(jnp.asarray(x), jnp.asarray(w),
+                                       x_qp, w_qp))
+    out.append(_rec("emulation/nc_conv2d", us, "14x14x8 * 3x3x8x16",
+                    "12x12x16 outputs, one packed MAC+reduce"))
+
+    # max pooling via subtract + tag-masked copies
+    xq = rng.integers(0, 256, size=(28, 28, 8), dtype=np.uint8)
+    _, us = timed(lambda: nc.nc_maxpool2d(jnp.asarray(xq), 2, 2))
+    out.append(_rec("emulation/nc_maxpool2d", us, "28x28x8 w2 s2",
+                    "14x14x8 lanes in lockstep"))
+    return out
 
 
 def run():
     out = []
+    RECORDS.clear()
     k1, k2 = jax.random.split(jax.random.key(0))
     M, Kdim, N = 256, 512, 256
     x = jax.random.normal(k1, (M, Kdim), jnp.float32)
@@ -26,24 +88,27 @@ def run():
 
     f32 = jax.jit(lambda a, b: a @ b)
     _, us = timed(lambda: jax.block_until_ready(f32(x, w)))
-    out.append(row("kernel/f32_dot", us, f"{M}x{Kdim}x{N}"))
+    out.append(_rec("kernel/f32_dot", us, f"{M}x{Kdim}x{N}"))
 
     wq, ws = quantize_per_channel(w)
     q8 = jax.jit(lambda a, b: K.quant_matmul(a, b, qp.scale, ws.reshape(-1)))
     _, us = timed(lambda: jax.block_until_ready(q8(xq, wq)))
-    out.append(row("kernel/w8a8_fused", us, "int8 MXU path (xla ref on cpu)"))
+    out.append(_rec("kernel/w8a8_fused", us, f"{M}x{Kdim}x{N}",
+                    "int8 MXU path (xla ref on cpu)"))
 
     base_flops = None
     for bits in (8, 4, 2, 1):
         wqb, wsb = quantize_per_channel(w, bits=bits)
-        planes = K.pack_weights(wqb.astype(jnp.int32), bits)
-        fn = jax.jit(lambda a, p: K.bitserial_matmul(
-            a, p, qp.scale, wsb.reshape(-1)))
-        flops = fn.lower(xq, planes).compile().cost_analysis().get("flops", 0)
+        planes = K.pack_weights(wqb.astype(jnp.int32), bits)  # byte-packed
+        fn = jax.jit(lambda a, p, bits=bits, wsb=wsb: K.bitserial_matmul(
+            a, p, qp.scale, wsb.reshape(-1), n_bits=bits))
+        flops = xla_cost_analysis(fn.lower(xq, planes).compile()).get("flops", 0)
         if bits == 8:
-            base_flops = flops
+            base_flops = flops or 1
         _, us = timed(lambda: jax.block_until_ready(fn(xq, planes)))
-        out.append(row(f"kernel/bitserial_{bits}b", us,
-                       f"{planes.shape[0]} planes; HLO flops "
-                       f"{flops/base_flops:.2f}x of 8b"))
+        out.append(_rec(f"kernel/bitserial_{bits}b", us, f"{M}x{Kdim}x{N}",
+                        f"{bits} planes byte-packed; HLO flops "
+                        f"{flops/base_flops:.2f}x of 8b"))
+
+    out.extend(_emulation_rows())
     return out

@@ -6,27 +6,63 @@ binary *planes* (LSB first).  Plane axis == word-line axis; every other axis
 is a bit line.  All element lanes advance in lockstep, exactly like the
 SRAM array: one bit-slice per cycle, carry/tag held in per-bit-line latches.
 
-Every operation returns ``(result_planes, cycles)`` where ``cycles`` follows
-the paper's published formulas:
+Packed bit-lane engine
+----------------------
+Every operation runs on a **word-packed** representation
+(:class:`PackedPlanes`): 32 element lanes are packed into one ``uint32``
+word, so a single bitwise AND/XOR/OR advances 32 lanes at once — the
+software analogue of the SRAM array clocking thousands of bit lines per
+cycle (and of Xcel-RAM's word-parallel bitwise reorganization).  The
+layout is::
+
+    words[p, w]  bit l  ==  plane p of lane (w * 32 + l)
+
+with lanes flattened C-order from ``lane_shape`` and zero-padded up to a
+multiple of 32.  Because the full adder, tag predication and selective
+copy are pure bitwise ops, lanes never interact across bit positions:
+carries propagate across *planes* (held in a packed carry word), never
+across lanes, so padding lanes stay zero and results are bit-exact with
+the per-lane reference.
+
+The engine has two dispatch modes for the same packed algorithm:
+
+* **concrete operands** (the emulation/test/bench path) run the
+  bit-position loops directly on host ``numpy`` words — thousands of
+  32-lane bitwise ops cost microseconds and nothing is ever compiled;
+* **traced operands** (inside ``jax.jit``) run the same loops under
+  ``lax.scan``, so traces stay O(1) in both lane count and bit width and
+  the ops compile cleanly into larger jitted pipelines.
+
+Cycle-model invariants (unchanged by packing — the packed engine models
+the *same* hardware, it is only a faster emulation):
 
     add        : n + 1                     (§III-B)
     multiply   : n^2 + 5n - 2              (§III-C)
     divide     : 1.5 n^2 + 5.5 n           (§III-C)
     reduction  : log2(k) x (move + widening add)   (§III-D)
 
-The emulation is *bit-exact* against integer arithmetic (tests/test_bitserial.py
-sweeps this with hypothesis); the cycle counts feed core/simulator.py.
+Every operation still returns ``(result_planes, cycles)`` with these
+formulas, and :func:`bitserial_reduce` keeps asserting its step-summed
+cycles against the closed form.  The public API is unchanged: ops accept
+either raw ``{0,1}`` plane tensors (``(n_bits, *lanes)`` uint8) or
+:class:`PackedPlanes`, and return the representation they were given.
+
+The emulation is *bit-exact* against integer arithmetic
+(tests/test_bitserial.py sweeps this); the cycle counts feed
+core/simulator.py.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 __all__ = [
+    "PackedPlanes",
+    "pack_lanes",
+    "unpack_lanes",
     "bitplane_pack",
     "bitplane_unpack",
     "add_cycles",
@@ -44,35 +80,152 @@ __all__ = [
 ]
 
 _PLANE_DTYPE = jnp.uint8
+_WORD = 32
+_FULL_WORD = np.uint32(0xFFFFFFFF)
+
+
+def _is_traced(*xs) -> bool:
+    return any(isinstance(x, jax.core.Tracer) for x in xs)
 
 
 # ---------------------------------------------------------------------------
 # Transposed (bit-plane) layout — the software analogue of the paper's TMU.
 # ---------------------------------------------------------------------------
-def bitplane_pack(x: jax.Array, n_bits: int) -> jax.Array:
+def bitplane_pack(x, n_bits: int):
     """Pack an unsigned integer tensor into ``n_bits`` binary planes (LSB first).
 
     Returns shape ``(n_bits, *x.shape)`` with values in {0, 1}.  This is the
     paper's transpose layout: plane index == word line, remaining axes == bit
     lines.
     """
-    x = x.astype(jnp.uint32)
-    shifts = jnp.arange(n_bits, dtype=jnp.uint32)
-    planes = (x[None, ...] >> shifts.reshape((n_bits,) + (1,) * x.ndim)) & 1
-    return planes.astype(_PLANE_DTYPE)
+    if _is_traced(x):
+        x = x.astype(jnp.uint32)
+        shifts = jnp.arange(n_bits, dtype=jnp.uint32)
+        planes = (x[None, ...] >> shifts.reshape((n_bits,) + (1,) * x.ndim)) & 1
+        return planes.astype(_PLANE_DTYPE)
+    x = np.asarray(x).astype(np.uint32)
+    shifts = np.arange(n_bits, dtype=np.uint32).reshape((n_bits,) + (1,) * x.ndim)
+    return ((x[None, ...] >> shifts) & 1).astype(np.uint8)
 
 
-def bitplane_unpack(planes: jax.Array, signed: bool = False) -> jax.Array:
+def bitplane_unpack(planes, signed: bool = False):
     """Inverse of :func:`bitplane_pack`.  ``signed`` interprets the planes as
     two's complement of width ``planes.shape[0]``."""
+    if isinstance(planes, PackedPlanes):
+        planes = unpack_lanes(planes)
     n = planes.shape[0]
-    weights = (jnp.uint32(1) << jnp.arange(n, dtype=jnp.uint32)).reshape(
-        (n,) + (1,) * (planes.ndim - 1)
+    if _is_traced(planes):
+        weights = (jnp.uint32(1) << jnp.arange(n, dtype=jnp.uint32)).reshape(
+            (n,) + (1,) * (planes.ndim - 1)
+        )
+        val = jnp.sum(planes.astype(jnp.uint32) * weights, axis=0).astype(jnp.int64)
+        if signed:
+            val = jnp.where(planes[-1].astype(bool), val - (1 << n), val)
+        return val
+    p = np.asarray(planes, np.uint64)
+    weights = (np.uint64(1) << np.arange(n, dtype=np.uint64)).reshape(
+        (n,) + (1,) * (p.ndim - 1)
     )
-    val = jnp.sum(planes.astype(jnp.uint32) * weights, axis=0).astype(jnp.int64)
+    val = (p * weights).sum(axis=0).astype(np.int64)
     if signed:
-        val = jnp.where(planes[-1].astype(bool), val - (1 << n), val)
+        val = np.where(p[-1].astype(bool), val - (1 << n), val)
     return val
+
+
+# ---------------------------------------------------------------------------
+# Packed bit-lane container: 32 lanes per uint32 word.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class PackedPlanes:
+    """Word-packed bit planes: ``words[p, w]`` bit ``l`` is plane ``p`` of
+    lane ``w * 32 + l`` (lanes flattened C-order from ``lane_shape``,
+    zero-padded to a multiple of 32)."""
+
+    words: jax.Array  # (n_planes, n_words) uint32
+    lane_shape: tuple[int, ...]
+
+    @property
+    def n_planes(self) -> int:
+        return self.words.shape[0]
+
+    @property
+    def n_lanes(self) -> int:
+        return int(np.prod(self.lane_shape)) if self.lane_shape else 1
+
+    @property
+    def n_words(self) -> int:
+        return self.words.shape[1]
+
+    def __getitem__(self, idx) -> "PackedPlanes":
+        """Plane-axis slicing (lane layout is preserved)."""
+        if not isinstance(idx, slice):
+            raise TypeError("PackedPlanes supports plane-axis slices only")
+        return PackedPlanes(self.words[idx], self.lane_shape)
+
+
+jax.tree_util.register_dataclass(
+    PackedPlanes, data_fields=["words"], meta_fields=["lane_shape"]
+)
+
+
+def pack_lanes(planes) -> PackedPlanes:
+    """Raw ``{0,1}`` planes ``(n, *lanes)`` -> :class:`PackedPlanes`."""
+    n = planes.shape[0]
+    lane_shape = tuple(planes.shape[1:])
+    if _is_traced(planes):
+        flat = planes.reshape(n, -1).astype(jnp.uint32)
+        n_lanes = flat.shape[1]
+        n_words = max(-(-n_lanes // _WORD), 1)
+        pad = n_words * _WORD - n_lanes
+        if pad:
+            flat = jnp.pad(flat, ((0, 0), (0, pad)))
+        shifts = jnp.arange(_WORD, dtype=jnp.uint32)
+        words = (flat.reshape(n, n_words, _WORD) << shifts).sum(axis=-1)
+        return PackedPlanes(words.astype(jnp.uint32), lane_shape)
+    flat = np.asarray(planes).astype(np.uint32).reshape(n, -1)
+    n_lanes = flat.shape[1]
+    n_words = max(-(-n_lanes // _WORD), 1)
+    pad = n_words * _WORD - n_lanes
+    if pad:
+        flat = np.pad(flat, ((0, 0), (0, pad)))
+    shifts = np.arange(_WORD, dtype=np.uint32)
+    words = np.bitwise_or.reduce(flat.reshape(n, n_words, _WORD) << shifts,
+                                 axis=-1)
+    return PackedPlanes(words.astype(np.uint32), lane_shape)
+
+
+def unpack_lanes(pp: PackedPlanes):
+    """:class:`PackedPlanes` -> raw ``{0,1}`` planes ``(n, *lanes)`` uint8."""
+    n, n_words = pp.words.shape
+    if _is_traced(pp.words):
+        shifts = jnp.arange(_WORD, dtype=jnp.uint32)
+        bits = (pp.words[..., None] >> shifts) & jnp.uint32(1)
+        flat = bits.reshape(n, n_words * _WORD)[:, : pp.n_lanes]
+        return flat.reshape((n,) + pp.lane_shape).astype(_PLANE_DTYPE)
+    shifts = np.arange(_WORD, dtype=np.uint32)
+    bits = (np.asarray(pp.words)[..., None] >> shifts) & np.uint32(1)
+    flat = bits.reshape(n, n_words * _WORD)[:, : pp.n_lanes]
+    return flat.reshape((n,) + pp.lane_shape).astype(np.uint8)
+
+
+def _coerce(x) -> tuple[PackedPlanes, bool]:
+    if isinstance(x, PackedPlanes):
+        return x, True
+    return pack_lanes(x), False
+
+
+def _emit(words, lane_shape: tuple[int, ...], packed: bool):
+    pp = PackedPlanes(words, lane_shape)
+    return pp if packed else unpack_lanes(pp)
+
+
+def _pack_mask(mask):
+    """Per-lane predicate -> packed tag word row (n_words,) uint32."""
+    if isinstance(mask, PackedPlanes):
+        return mask.words[0]
+    if _is_traced(mask):
+        return pack_lanes(mask.astype(_PLANE_DTYPE)[None]).words[0]
+    return pack_lanes(np.asarray(mask, np.uint8)[None]).words[0]
 
 
 # ---------------------------------------------------------------------------
@@ -108,159 +261,296 @@ def reduce_cycles(k: int, width: int) -> int:
 
 
 # ---------------------------------------------------------------------------
-# The column peripheral: full adder + carry latch + tag latch, one bit-slice
-# per cycle.  Python loops are over *bits* (static, <=64) — element lanes are
-# fully vectorized, mirroring the massively-parallel bit lines.
+# The column peripheral, word-packed: full adder + carry latch + tag latch,
+# one bit-slice per cycle.  One uint32 word advances 32 lanes per bitwise op.
+# Concrete operands run numpy loops (microseconds, nothing compiled); traced
+# operands run the identical recurrence under lax.scan (O(1) trace size).
 # ---------------------------------------------------------------------------
-def _full_adder(a, b, c):
+def _word_full_adder(a, b, c):
     s = a ^ b ^ c
     carry = (a & b) | ((a ^ b) & c)
     return s, carry
 
 
-def _plane(x: jax.Array, i: int, shape, like) -> jax.Array:
-    if i < x.shape[0]:
-        return x[i]
-    return jnp.zeros(shape, _PLANE_DTYPE)
+def _zext_np(w: np.ndarray, n: int) -> np.ndarray:
+    if w.shape[0] == n:
+        return w
+    if w.shape[0] > n:
+        return w[:n]
+    out = np.zeros((n,) + w.shape[1:], np.uint32)
+    out[: w.shape[0]] = w
+    return out
 
 
-def bitserial_add(a: jax.Array, b: jax.Array, out_bits: int | None = None):
-    """Element-wise sum of two plane tensors.  Returns (planes, cycles)."""
-    n = max(a.shape[0], b.shape[0])
-    out_bits = out_bits if out_bits is not None else n + 1
-    lane_shape = a.shape[1:]
-    carry = jnp.zeros(lane_shape, _PLANE_DTYPE)
-    out = []
+def _zext_jnp(w, n: int):
+    if w.shape[0] == n:
+        return w
+    if w.shape[0] > n:
+        return w[:n]
+    pad = [(0, n - w.shape[0])] + [(0, 0)] * (w.ndim - 1)
+    return jnp.pad(w, pad)
+
+
+def _add_words(aw, bw, *, out_bits: int, invert_b: bool = False,
+               carry_one: bool = False):
+    """Packed ripple add over ``out_bits`` planes.
+
+    ``invert_b``/``carry_one`` give two's-complement subtraction for free —
+    complement planes come from BLB, carry latch preset to 1 (§III-B).
+    """
+    if _is_traced(aw, bw):
+        a = _zext_jnp(jnp.asarray(aw), out_bits)
+        b = _zext_jnp(jnp.asarray(bw), out_bits)
+        if invert_b:
+            b = ~b
+        init = jnp.full(a.shape[1:], _FULL_WORD if carry_one else 0, jnp.uint32)
+
+        def step(carry, planes):
+            s, carry = _word_full_adder(planes[0], planes[1], carry)
+            return carry, s
+
+        _, out = jax.lax.scan(step, init, (a, b))
+        return out
+    a = _zext_np(np.asarray(aw), out_bits)
+    b = _zext_np(np.asarray(bw), out_bits)
+    if invert_b:
+        b = ~b
+    carry = np.full(a.shape[1:], _FULL_WORD if carry_one else 0, np.uint32)
+    out = np.empty_like(a)
     for i in range(out_bits):
-        ai = _plane(a, i, lane_shape, a)
-        bi = _plane(b, i, lane_shape, b)
-        s, carry = _full_adder(ai, bi, carry)
-        out.append(s)
-    return jnp.stack(out), add_cycles(n)
+        out[i], carry = _word_full_adder(a[i], b[i], carry)
+    return out
 
 
-def bitserial_sub(a: jax.Array, b: jax.Array, out_bits: int | None = None):
+def _mul_words(aw, bw):
+    """Packed tag-predicated shifted-add multiply (§III-C).
+
+    One step per multiplier plane: full-add the (plane-shifted) multiplicand
+    into the product under that plane's tag word.
+    """
+    na, nb = aw.shape[0], bw.shape[0]
+    total = na + nb
+    if _is_traced(aw, bw):
+        apad = _zext_jnp(jnp.asarray(aw), total)
+        bw = jnp.asarray(bw)
+        # plane-shifted copies of the multiplicand: roll is exact because
+        # the top nb planes of apad are zero.
+        shifted = jnp.stack([jnp.roll(apad, j, axis=0) for j in range(nb)])
+
+        def step(prod, tj):
+            tag, sh = tj
+
+            def astep(carry, planes):
+                s, carry = _word_full_adder(planes[0], planes[1], carry)
+                return carry, s
+
+            _, summed = jax.lax.scan(astep, jnp.zeros_like(tag), (prod, sh))
+            return (tag & summed) | (~tag & prod), None
+
+        prod, _ = jax.lax.scan(step, jnp.zeros_like(apad), (bw, shifted))
+        return prod
+    apad = _zext_np(np.asarray(aw), total)
+    bw = np.asarray(bw)
+    prod = np.zeros_like(apad)
+    for j in range(nb):
+        tag = bw[j]
+        ntag = ~tag
+        shifted = np.roll(apad, j, axis=0)
+        carry = np.zeros_like(tag)
+        for i in range(total):
+            s, carry = _word_full_adder(prod[i], shifted[i], carry)
+            prod[i] = (tag & s) | (ntag & prod[i])
+    return prod
+
+
+def _select_words(dst, src, tag):
+    """Tag-predicated copy: dst where tag bit is 0, src where it is 1."""
+    if _is_traced(dst, src, tag):
+        src = _zext_jnp(jnp.asarray(src), dst.shape[0])
+        return (tag & src) | (~tag & dst)
+    src = _zext_np(np.asarray(src), dst.shape[0])
+    return (tag & src) | (~tag & np.asarray(dst))
+
+
+def bitserial_add(a, b, out_bits: int | None = None):
+    """Element-wise sum of two plane tensors.  Returns (planes, cycles)."""
+    pa, packed_a = _coerce(a)
+    pb, packed_b = _coerce(b)
+    n = max(pa.n_planes, pb.n_planes)
+    out_bits = out_bits if out_bits is not None else n + 1
+    ow = _add_words(pa.words, pb.words, out_bits=out_bits)
+    return _emit(ow, pa.lane_shape, packed_a or packed_b), add_cycles(n)
+
+
+def bitserial_sub(a, b, out_bits: int | None = None):
     """a - b in two's complement (width = max width + 1 by default).
 
     Implemented the SRAM way: complement planes of ``b`` are read from BLB
     (free), carry latch preset to 1.  Returns (planes, cycles); MSB of the
     result is the sign — it drives the tag latch for max/ReLU predication.
     """
-    n = max(a.shape[0], b.shape[0])
+    pa, packed_a = _coerce(a)
+    pb, packed_b = _coerce(b)
+    n = max(pa.n_planes, pb.n_planes)
     out_bits = out_bits if out_bits is not None else n + 1
-    lane_shape = a.shape[1:]
-    carry = jnp.ones(lane_shape, _PLANE_DTYPE)
-    out = []
-    for i in range(out_bits):
-        ai = _plane(a, i, lane_shape, a)
-        bi = _plane(b, i, lane_shape, b) ^ 1
-        s, carry = _full_adder(ai, bi, carry)
-        out.append(s)
-    return jnp.stack(out), add_cycles(n)
+    ow = _add_words(pa.words, pb.words, out_bits=out_bits,
+                    invert_b=True, carry_one=True)
+    return _emit(ow, pa.lane_shape, packed_a or packed_b), add_cycles(n)
 
 
-def bitserial_multiply(a: jax.Array, b: jax.Array):
+def bitserial_multiply(a, b):
     """Element-wise product via tag-predicated shifted adds (§III-C).
 
     ``a`` is the multiplicand, ``b`` the multiplier; product has
     ``a_bits + b_bits`` planes.  Cycle count is the paper's n^2+5n-2 with
     n = max(a_bits, b_bits).
     """
-    na, nb = a.shape[0], b.shape[0]
-    lane_shape = a.shape[1:]
-    prod = [jnp.zeros(lane_shape, _PLANE_DTYPE) for _ in range(na + nb)]
-    for j in range(nb):
-        tag = b[j]  # load multiplier bit into the tag latch
-        carry = jnp.zeros(lane_shape, _PLANE_DTYPE)
-        for i in range(na):
-            s, carry = _full_adder(prod[j + i], a[i], carry)
-            prod[j + i] = jnp.where(tag.astype(bool), s, prod[j + i])
-        # carry lands on a fresh (still-zero under this tag) plane
-        prod[j + na] = jnp.where(tag.astype(bool), carry, prod[j + na])
-    n = max(na, nb)
-    return jnp.stack(prod), mul_cycles(n)
+    pa, packed_a = _coerce(a)
+    pb, packed_b = _coerce(b)
+    ow = _mul_words(pa.words, pb.words)
+    n = max(pa.n_planes, pb.n_planes)
+    return _emit(ow, pa.lane_shape, packed_a or packed_b), mul_cycles(n)
 
 
-def bitserial_mac(acc: jax.Array, a: jax.Array, b: jax.Array):
+def bitserial_mac(acc, a, b):
     """acc += a * b.  Returns (planes, cycles) with acc width preserved."""
-    prod, c_mul = bitserial_multiply(a, b)
-    out, c_add = bitserial_add(acc, prod, out_bits=acc.shape[0])
-    return out, c_mul + c_add
+    pacc, packed_acc = _coerce(acc)
+    pa, _ = _coerce(a)
+    pb, _ = _coerce(b)
+    prod = _mul_words(pa.words, pb.words)
+    n_mul = max(pa.n_planes, pb.n_planes)
+    n_add = max(pacc.n_planes, prod.shape[0])
+    out = _add_words(pacc.words, prod, out_bits=pacc.n_planes)
+    cycles = mul_cycles(n_mul) + add_cycles(n_add)
+    return _emit(out, pacc.lane_shape, packed_acc), cycles
 
 
-def bitserial_reduce(planes: jax.Array, out_bits: int | None = None):
+# ---------------------------------------------------------------------------
+# Reduction (§III-D): log-tree over the last lane axis.  The reduce axis is
+# packed row-aligned (padded to a power of two) so each halving step is
+# either a word-slice (half >= 32 lanes) or an in-word shift (half < 32) —
+# the SWAR form of "move the top half of the lanes under the bottom half".
+# ---------------------------------------------------------------------------
+def _reduce_add_words(lo, hi):
+    """Widening packed add for one tree step: width w -> w + 1."""
+    w = lo.shape[0]
+    return _add_words(lo, hi, out_bits=w + 1)
+
+
+def _pack_rows(planes3, P: int):
+    """(w, B, P) {0,1} planes -> (w, B, n_words) with the reduce axis packed
+    row-aligned: P >= 32 gives P/32 words/row, P < 32 one word holding P bits."""
+    w, B, _ = planes3.shape
+    g = min(P, _WORD)
+    n_words = max(P // _WORD, 1)
+    if _is_traced(planes3):
+        x = planes3.astype(jnp.uint32).reshape(w, B, n_words, g)
+        shifts = jnp.arange(g, dtype=jnp.uint32)
+        return (x << shifts).sum(axis=-1).astype(jnp.uint32)
+    x = np.asarray(planes3).astype(np.uint32).reshape(w, B, n_words, g)
+    shifts = np.arange(g, dtype=np.uint32)
+    return np.bitwise_or.reduce(x << shifts, axis=-1)
+
+
+def bitserial_reduce(planes, out_bits: int | None = None):
     """Sum across the *last* axis (bit lines) via the log-tree of §III-D.
 
     Each step moves the top half of the lanes under the bottom half and adds
     with one extra bit of width.  Returns (planes, cycles) with lane axis
     reduced to 1.
     """
-    k = planes.shape[-1]
-    width = planes.shape[0]
+    packed_in = isinstance(planes, PackedPlanes)
+    raw = unpack_lanes(planes) if packed_in else planes
+    traced = _is_traced(raw)
+    xp = jnp if traced else np
+    k = raw.shape[-1]
+    width = raw.shape[0]
+    other = tuple(raw.shape[1:-1])
     cycles = 0
-    cur = planes
-    while cur.shape[-1] > 1:
-        m = cur.shape[-1]
-        half = (m + 1) // 2
-        lo = cur[..., :half]
-        hi = cur[..., half:]
-        if hi.shape[-1] < half:  # pad odd lane counts with zero lines
-            pad = [(0, 0)] * (hi.ndim - 1) + [(0, half - hi.shape[-1])]
-            hi = jnp.pad(hi, pad)
-        w = cur.shape[0]
-        cur, _ = bitserial_add(lo, hi, out_bits=w + 1)
-        cycles += move_cycles(w) + add_cycles(w)
+    if k <= 1:
+        cur = raw
+    else:
+        steps = int(np.ceil(np.log2(k)))
+        P = 1 << steps
+        pad = [(0, 0)] * (raw.ndim - 1) + [(0, P - k)]
+        B = int(np.prod(other)) if other else 1
+        words = _pack_rows(xp.pad(raw, pad).reshape(width, B, P), P)
+        w, m = width, P
+        while m > 1:
+            half = m // 2
+            if half >= _WORD:
+                hw = half // _WORD
+                lo, hi = words[..., :hw], words[..., hw:]
+            else:
+                keep = np.uint32((1 << half) - 1)
+                lo = words & keep
+                hi = (words >> np.uint32(half)) & keep
+            words = _reduce_add_words(lo, hi)
+            cycles += move_cycles(w) + add_cycles(w)
+            w += 1
+            m = half
+        # one lane left: bit 0 of the single word per row
+        cur = (words[..., 0] & 1).astype(
+            _PLANE_DTYPE if traced else np.uint8).reshape((w,) + other + (1,))
     if out_bits is not None:
         cur = _resize_planes(cur, out_bits)
     # sanity: cycle formula matches the closed form
     assert cycles == reduce_cycles(k, width), (cycles, reduce_cycles(k, width))
+    if packed_in:
+        return pack_lanes(cur), cycles
     return cur, cycles
 
 
-def _resize_planes(planes: jax.Array, n: int) -> jax.Array:
+def _resize_planes(planes, n: int):
     if planes.shape[0] == n:
         return planes
     if planes.shape[0] > n:
         return planes[:n]
     pad = [(0, n - planes.shape[0])] + [(0, 0)] * (planes.ndim - 1)
-    return jnp.pad(planes, pad)
+    return (jnp if _is_traced(planes) else np).pad(planes, pad)
 
 
 # ---------------------------------------------------------------------------
 # Predicated ops (tag-latch) — ReLU / max / selective copy (§IV-D).
 # ---------------------------------------------------------------------------
-def selective_copy(dst: jax.Array, src: jax.Array, mask: jax.Array):
+def selective_copy(dst, src, mask):
     """Copy ``src`` planes over ``dst`` where ``mask`` (per bit line) is 1.
 
     Cycles: one per bit (tag-enabled write-back), plus 1 to load the tag.
     """
-    n = max(dst.shape[0], src.shape[0])
-    src = _resize_planes(src, dst.shape[0])
-    out = jnp.where(mask.astype(bool)[None, ...], src, dst)
-    return out, n + 1
+    pd, packed_d = _coerce(dst)
+    ps, _ = _coerce(src)
+    n = max(pd.n_planes, ps.n_planes)
+    tag = _pack_mask(mask)
+    out = _select_words(pd.words, ps.words, tag)
+    return _emit(out, pd.lane_shape, packed_d), n + 1
 
 
-def bitserial_relu(x: jax.Array):
+def bitserial_relu(x):
     """Two's-complement ReLU: zero lanes whose sign plane is set (§IV-D)."""
-    sign = x[-1]
-    zero = jnp.zeros_like(x)
-    out, cyc = selective_copy(x, zero, sign)
-    return out, cyc
+    px, packed_x = _coerce(x)
+    sign = px.words[-1]
+    out = px.words & ~sign
+    return _emit(out, px.lane_shape, packed_x), px.n_planes + 1
 
 
-def bitserial_max(a: jax.Array, b: jax.Array):
+def bitserial_max(a, b):
     """Element-wise max of two unsigned plane tensors via subtract + masked
     copy (§IV-D max pooling)."""
-    diff, c_sub = bitserial_sub(a, b)
-    a_lt_b = diff[-1]  # sign of a-b
-    out, c_cp = selective_copy(a, b, a_lt_b)
-    return out, c_sub + c_cp
+    pa, packed_a = _coerce(a)
+    pb, packed_b = _coerce(b)
+    n = max(pa.n_planes, pb.n_planes)
+    diff = _add_words(pa.words, pb.words, out_bits=n + 1,
+                      invert_b=True, carry_one=True)
+    a_lt_b = diff[-1]  # sign of a-b drives the tag latch
+    out = _select_words(pa.words, pb.words, a_lt_b)
+    return _emit(out, pa.lane_shape, packed_a or packed_b), add_cycles(n) + n + 1
 
 
 # ---------------------------------------------------------------------------
 # Convenience: quantized dot product exactly as an array column computes it.
 # ---------------------------------------------------------------------------
-def bitserial_dot(x: jax.Array, w: jax.Array, n_bits: int = 8, acc_bits: int = 24):
+def bitserial_dot(x, w, n_bits: int = 8, acc_bits: int = 24):
     """Per-lane dot product: lanes hold channels, reduce at the end.
 
     ``x``/``w``: unsigned integer tensors of shape [..., K].  Emulates the
@@ -270,7 +560,8 @@ def bitserial_dot(x: jax.Array, w: jax.Array, n_bits: int = 8, acc_bits: int = 2
     """
     xp = bitplane_pack(x, n_bits)
     wp = bitplane_pack(w, n_bits)
-    acc = jnp.zeros((acc_bits,) + x.shape, _PLANE_DTYPE)
+    zeros = jnp.zeros if _is_traced(x, w) else np.zeros
+    acc = zeros((acc_bits,) + tuple(x.shape), np.uint8)
     cycles = 0
     acc, c = bitserial_mac(acc, xp, wp)
     cycles += c

@@ -6,12 +6,18 @@ would — uint8 operands, bit-plane transposed layout, tag-predicated MACs,
 in-array log-tree channel reduction, fixed-point requantization — and is
 validated against jnp oracles in tests/test_nc_layers.py.
 
-It is intentionally written for clarity over speed (python loops over bit
-positions); use it on small shapes.  The TPU-fast path lives in repro/kernels.
+All output pixels and filters are *lanes*: conv extracts every RxSxC window
+up front and runs ONE packed MAC + log-tree reduction over (E, F, M, K)
+lanes, exactly the way the cache computes every output in lockstep (and the
+way the word-packed engine in core/bitserial.py wants its work: 32 lanes
+per uint32 word, no Python loops over pixels).  Layer cycle counts are
+Python ints (these functions are inherently eager, like the per-pixel
+formulation before them), so the layer math runs on the engine's host
+(numpy) fast path; accounting is unchanged: each lane group still reports
+``per_dot_cycles * n_dots`` — the emulation got faster, the modeled
+hardware did not.  The TPU-fast path lives in repro/kernels.
 """
 from __future__ import annotations
-
-import math
 
 import jax
 import jax.numpy as jnp
@@ -23,20 +29,40 @@ from repro.core import quantize as q
 __all__ = ["nc_dot", "nc_conv2d", "nc_maxpool2d", "nc_relu_requant", "nc_fc"]
 
 
-def nc_dot(x_q: jax.Array, w_q: jax.Array, acc_bits: int = 24):
+def nc_dot(x_q, w_q, acc_bits: int = 24):
     """Quantized dot products, one per bit-line group.
 
     x_q: [..., K] uint8 inputs, w_q: [..., K] uint8 filters (same shape).
-    Each of the K lanes performs one 8-bit MAC into a 24-bit partial sum,
-    then the lanes reduce via the in-array log tree.  Returns (int values
-    [...], cycles) — bit-exact with the integer dot product.
+    Each of the K lanes performs one 8-bit MAC into a ``acc_bits``-bit
+    partial sum, then the lanes reduce via the in-array log tree.  Returns
+    (int values [...], cycles) — bit-exact with the integer dot product.
     """
-    xp = bs.bitplane_pack(x_q.astype(jnp.uint32), 8)
-    wp = bs.bitplane_pack(w_q.astype(jnp.uint32), 8)
-    acc = jnp.zeros((acc_bits,) + x_q.shape, jnp.uint8)
+    xp = bs.bitplane_pack(np.asarray(x_q, np.uint32), 8)
+    wp = bs.bitplane_pack(np.asarray(w_q, np.uint32), 8)
+    acc = np.zeros((acc_bits,) + xp.shape[1:], np.uint8)
     acc, c_mac = bs.bitserial_mac(acc, xp, wp)
     red, c_red = bs.bitserial_reduce(acc)
     return bs.bitplane_unpack(red)[..., 0], c_mac + c_red
+
+
+def _quantize_np(x, qp: q.QuantParams) -> np.ndarray:
+    """Host mirror of core.quantize.quantize (float32 divide +
+    round-half-even + clip — bit-identical to the jnp path)."""
+    scale = np.float32(qp.scale)
+    zp = int(qp.zero_point)
+    vals = np.round(np.asarray(x, np.float32) / scale) + zp
+    return np.clip(vals, qp.qmin, qp.qmax).astype(np.int64)
+
+
+def _extract_windows(x: np.ndarray, R: int, S: int, stride: int):
+    """[H, W, C] -> ([E, F, R*S*C] window tensor, E, F) (VALID padding)."""
+    H, W, C = x.shape
+    E = (H - R) // stride + 1
+    F = (W - S) // stride + 1
+    rows = np.arange(E)[:, None] * stride + np.arange(R)[None, :]  # (E, R)
+    cols = np.arange(F)[:, None] * stride + np.arange(S)[None, :]  # (F, S)
+    win = x[rows][:, :, cols]  # (E, R, F, S, C)
+    return win.transpose(0, 2, 1, 3, 4).reshape(E, F, R * S * C), E, F
 
 
 def nc_conv2d(
@@ -52,63 +78,59 @@ def nc_conv2d(
     (zero-point affine), the cross terms of (x-zx)(w-zw) are handled exactly
     as the integer expansion, and the result is returned as int32 — what the
     reserved-way staging would hold before requantization.
+
+    Every (output pixel, filter) pair is a lane group: one packed MAC +
+    reduction computes the whole [E, F, M] output in lockstep.  Peak host
+    memory scales with E*F*M*K lanes (~40 bit-planes of packed words plus
+    the uint8 window broadcast) — emulation-scale layers only; tile over
+    output pixels or filters before pointing this at ImageNet-size layers.
     """
-    xq = q.quantize(x, x_qp).astype(jnp.int64)
-    wq = q.quantize(w, w_qp).astype(jnp.int64)
-    H, W, C = x.shape
-    R, S, Cw, M = w.shape
-    assert C == Cw
-    E = (H - R) // stride + 1
-    F = (W - S) // stride + 1
-    out = np.zeros((E, F, M), np.int64)
-    total_cycles = 0
-    for e in range(E):
-        for f in range(F):
-            win = xq[e * stride : e * stride + R, f * stride : f * stride + S]
-            # lanes = RxSxC (filter splitting across lines is a layout detail;
-            # arithmetic is identical) — all M computed by replicated lanes
-            for m in range(M):
-                val, cyc = nc_dot(
-                    win.reshape(-1).astype(jnp.uint8),
-                    wq[..., m].reshape(-1).astype(jnp.uint8),
-                    acc_bits=32,
-                )
-                total_cycles += cyc
-                # affine-zero-point correction (done by the accumulating
-                # requant step in-cache; exact integer identity)
-                sx = int(jnp.sum(win))
-                sw = int(jnp.sum(wq[..., m]))
-                k = R * S * C
-                out[e, f, m] = (
-                    int(val)
-                    - int(w_qp.zero_point) * sx
-                    - int(x_qp.zero_point) * sw
-                    + k * int(x_qp.zero_point) * int(w_qp.zero_point)
-                )
+    xq = _quantize_np(np.asarray(x), x_qp)
+    wq = _quantize_np(np.asarray(w), w_qp)
+    R, S, Cw, M = wq.shape
+    assert xq.shape[2] == Cw
+    win, E, F = _extract_windows(xq, R, S, stride)  # (E, F, K)
+    K = R * S * Cw
+
+    # lanes = E x F x M x K (filter splitting across lines is a layout
+    # detail; arithmetic is identical) — all pixels/filters in lockstep
+    xb = np.broadcast_to(win[:, :, None, :], (E, F, M, K))
+    wb = np.broadcast_to(wq.reshape(K, M).T[None, None], (E, F, M, K))
+    val, cyc = nc_dot(xb.astype(np.uint8), wb.astype(np.uint8), acc_bits=32)
+    total_cycles = int(cyc) * E * F * M  # per-dot cost, one dot per (e,f,m)
+
+    # affine-zero-point correction (done by the accumulating requant step
+    # in-cache; exact integer identity)
+    sx = win.sum(axis=-1)  # (E, F)
+    sw = wq.sum(axis=(0, 1, 2))  # (M,)
+    out = (
+        val.astype(np.int64)
+        - int(w_qp.zero_point) * sx[:, :, None]
+        - int(x_qp.zero_point) * sw[None, None, :]
+        + K * int(x_qp.zero_point) * int(w_qp.zero_point)
+    )
     return jnp.asarray(out, jnp.int32), total_cycles
 
 
 def nc_maxpool2d(x_q: jax.Array, window: int, stride: int):
-    """uint8 max pooling via subtract + MSB-masked copies (§IV-D)."""
-    H, W, C = x_q.shape
-    E = (H - window) // stride + 1
-    F = (W - window) // stride + 1
-    out = np.zeros((E, F, C), np.uint8)
+    """uint8 max pooling via subtract + MSB-masked copies (§IV-D).
+
+    All E x F x C output lanes advance in lockstep through the window^2 - 1
+    sequential max steps (cycle count stays per-pixel, as the per-pixel
+    formulation reported it)."""
+    win, E, F = _extract_windows(np.asarray(x_q, np.int64), window, window,
+                                 stride)
+    C = x_q.shape[2]
+    win = win.reshape(E, F, window * window, C)
+    cur = bs.pack_lanes(bs.bitplane_pack(win[:, :, 0].astype(np.uint32), 8))
     cycles = 0
-    for e in range(E):
-        for f in range(F):
-            win = x_q[e * stride : e * stride + window, f * stride : f * stride + window]
-            cur = bs.bitplane_pack(win[0, 0].astype(jnp.uint32), 8)
-            for i in range(window):
-                for j in range(window):
-                    if i == j == 0:
-                        continue
-                    nxt = bs.bitplane_pack(win[i, j].astype(jnp.uint32), 8)
-                    cur, c = bs.bitserial_max(cur, nxt)
-                    cur = cur[:8]
-                    cycles += c
-            out[e, f] = np.asarray(bs.bitplane_unpack(cur))
-    return jnp.asarray(out), cycles
+    for t in range(1, window * window):
+        nxt = bs.pack_lanes(bs.bitplane_pack(win[:, :, t].astype(np.uint32), 8))
+        cur, c = bs.bitserial_max(cur, nxt)
+        cur = cur[:8]
+        cycles += c * E * F
+    out = bs.bitplane_unpack(cur)  # (E, F, C)
+    return jnp.asarray(out, jnp.uint8), cycles
 
 
 def nc_relu_requant(
@@ -123,5 +145,6 @@ def nc_relu_requant(
 
 def nc_fc(x: jax.Array, w: jax.Array, x_qp: q.QuantParams, w_qp: q.QuantParams):
     """FC as a 1x1 conv over a 1x1 'image' (§IV-D)."""
-    out, cycles = nc_conv2d(x[None, None, :], w[None, None, :, :], x_qp, w_qp)
+    out, cycles = nc_conv2d(np.asarray(x)[None, None, :],
+                            np.asarray(w)[None, None, :, :], x_qp, w_qp)
     return out[0, 0], cycles

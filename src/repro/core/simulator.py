@@ -64,7 +64,13 @@ PAPER = dict(
 
 @dataclasses.dataclass(frozen=True)
 class SimConstants:
-    """Calibrated constants (see module docstring for provenance)."""
+    """Calibrated constants (see module docstring for provenance).
+
+    The word-packed emulation engine (core/bitserial.py) models the same
+    hardware with unchanged per-op cycle formulas, so its mechanistic
+    costs are hard floors for these calibrated constants —
+    :meth:`validate` asserts that invariant and runs once per
+    :func:`simulate_network` call."""
 
     mac8_cycles: int = 236
     reduce_step_cycles: int = 132
@@ -84,6 +90,19 @@ class SimConstants:
     # energy model
     dram_pj_per_byte: float = 20.0
     bus_pj_per_byte: float = 5.0
+
+    def validate(self) -> "SimConstants":
+        """Check the calibrated constants against the emulation's
+        mechanistic cycle floors (paper §III formulas)."""
+        card = bs.OpCycles(bits=8, acc_bits=24, mac8=self.mac8_cycles)
+        assert card.mac_overhead >= 0, (
+            f"mac8={self.mac8_cycles} below the mul(8)+add(24) floor "
+            f"{card.mac_floor}")
+        # one reduce step on a 32-bit partial sum: move(w) + add(w) minimum
+        floor = bs.move_cycles(32) + bs.add_cycles(32)
+        assert self.reduce_step_cycles >= floor, (
+            self.reduce_step_cycles, floor)
+        return self
 
     def scaled_bandwidths(self, geom: CacheGeometry, base: CacheGeometry):
         """Input/output movement parallelizes over slices (§VI-D); filter
@@ -266,7 +285,7 @@ def simulate_network(
     const: SimConstants = SimConstants(),
     base_geom: CacheGeometry = XEON_E5_35MB,
 ) -> NetworkResult:
-    const = const.scaled_bandwidths(geom, base_geom)
+    const = const.validate().scaled_bandwidths(geom, base_geom)
     return NetworkResult(tuple(simulate_layer(s, geom, const) for s in specs),
                          geom, const)
 

@@ -8,16 +8,23 @@ processes one *bit-plane* of the weight tensor per MXU pass:
 Properties carried over from the paper:
   * latency proportional to weight precision (planes are a static unroll:
     4-bit weights cost half the MXU passes of 8-bit),
-  * transposed layout: planes are precomputed once at weight-load time
-    (ref.pack_bitplanes == the TMU gateway),
+  * transposed layout: planes are packed once at weight-load time
+    (ref.pack_bitplanes_bytes == the TMU gateway).  Storage is
+    **byte-packed**: one uint8 carries all n_bits planes of an element
+    (bit b == plane b), so a (bk, bn) tile moves 8x less VMEM traffic
+    than the unpacked [n_bits, bk, bn] layout; each MXU pass recovers its
+    plane in-kernel with a shift+mask (a VPU-cheap op on the int32 tile),
   * beyond-paper: *zero-plane skipping* — a per-(plane, K-block, N-block)
-    occupancy mask is computed at pack time and all-zero plane-blocks are
-    predicated off with @pl.when, exploiting bit-level sparsity the SRAM
-    substrate cannot (it must clock every bit-slice).
+    occupancy mask predicates all-zero plane-blocks off with @pl.when,
+    exploiting bit-level sparsity the SRAM substrate cannot (it must clock
+    every bit-slice).  Pass ``plane_mask`` precomputed at weight-load time
+    (plane_block_mask over the unpacked planes); otherwise it is derived
+    from the byte-packed tensor on every call, which transiently
+    materializes the full [n_bits, K, N] plane stack.
 
 Grid: (M/bm, N/bn, K/bk) with K innermost; planes of one (bk, bn) tile are
 looped inside the kernel body (static python loop -> fully unrolled MXU
-passes over VMEM-resident tiles).
+passes over the VMEM-resident byte tile).
 """
 from __future__ import annotations
 
@@ -28,7 +35,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.ref import pack_bitplanes, plane_weights
+from repro.kernels.ref import (pack_bitplanes_bytes, plane_weights,
+                               unpack_bitplanes_bytes)
 
 DEFAULT_BM = 128
 DEFAULT_BN = 128
@@ -44,12 +52,13 @@ def _kernel(x_ref, p_ref, mask_ref, xs_ref, ws_ref, o_ref, acc_ref, *, n_k: int,
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     pw = plane_weights(n_bits)
+    packed = p_ref[...].astype(jnp.int32)  # (bk, bn) bytes: all planes
     for b in range(n_bits):  # bit-serial: one plane per MXU pass
         @pl.when(mask_ref[b, 0, 0] != 0)  # zero-plane skip (beyond-paper)
         def _plane(b=b):
+            plane = (packed >> b) & 1  # in-kernel unpack: shift+mask
             part = jnp.dot(
-                x_ref[...].astype(jnp.int32),
-                p_ref[b].astype(jnp.int32),
+                x_ref[...].astype(jnp.int32), plane,
                 preferred_element_type=jnp.int32,
             )
             acc_ref[...] += pw[b] * part
@@ -62,28 +71,44 @@ def _kernel(x_ref, p_ref, mask_ref, xs_ref, ws_ref, o_ref, acc_ref, *, n_k: int,
 
 
 def plane_block_mask(planes: jax.Array, bk: int, bn: int) -> jax.Array:
-    """[n_bits, K/bk, N/bn] int8 occupancy of each plane tile (pack time)."""
+    """[n_bits, K/bk, N/bn] int8 occupancy of each plane tile — compute
+    once at weight-load time and pass as ``plane_mask``.
+
+    ``planes`` is the unpacked [n_bits, K, N] {0,1} layout (use
+    ref.unpack_bitplanes_bytes first when starting from byte-packed)."""
     n_bits, K, N = planes.shape
     p = planes.reshape(n_bits, K // bk, bk, N // bn, bn)
     return (p.sum(axis=(2, 4)) > 0).astype(jnp.int8)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("bm", "bn", "bk", "out_dtype", "interpret")
+    jax.jit, static_argnames=("n_bits", "bm", "bn", "bk", "out_dtype",
+                              "interpret")
 )
 def bitserial_matmul(
     x_q: jax.Array,  # [M, K] int8 activations
-    planes: jax.Array,  # [n_bits, K, N] {0,1} int8 (pack_bitplanes)
+    planes: jax.Array,  # [K, N] uint8 byte-packed, or [n_bits, K, N] {0,1}
     x_scale: jax.Array,  # scalar f32
     w_scale: jax.Array,  # [N] f32
+    plane_mask: jax.Array | None = None,  # [n_bits, K/bk, N/bn] int8
     *,
+    n_bits: int | None = None,
     bm: int = DEFAULT_BM,
     bn: int = DEFAULT_BN,
     bk: int = DEFAULT_BK,
     out_dtype=jnp.float32,
     interpret: bool = True,
 ) -> jax.Array:
-    n_bits, K, N = planes.shape
+    if planes.ndim == 3:  # legacy unpacked planes: re-pack to bytes
+        n_bits = planes.shape[0]
+        packed = pack_bitplanes_bytes(
+            jnp.sum(planes.astype(jnp.int32)
+                    << jnp.arange(n_bits, dtype=jnp.int32)[:, None, None],
+                    axis=0), n_bits)
+    else:
+        n_bits = 8 if n_bits is None else n_bits
+        packed = planes.astype(jnp.uint8)
+    K, N = packed.shape
     M = x_q.shape[0]
     assert x_q.shape[1] == K
     bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
@@ -92,24 +117,28 @@ def bitserial_matmul(
     if pad_m or pad_k:
         x_q = jnp.pad(x_q, ((0, pad_m), (0, pad_k)))
     if pad_k or pad_n:
-        planes = jnp.pad(planes, ((0, 0), (0, pad_k), (0, pad_n)))
+        packed = jnp.pad(packed, ((0, pad_k), (0, pad_n)))
     w_scale = jnp.broadcast_to(jnp.asarray(w_scale, jnp.float32), (N,))
     if pad_n:
         w_scale = jnp.pad(w_scale, (0, pad_n))
     x_scale = jnp.reshape(jnp.asarray(x_scale, jnp.float32), (1,))
 
     Mp, Kp = x_q.shape
-    Np = planes.shape[2]
+    Np = packed.shape[1]
     n_k = Kp // bk
     grid = (Mp // bm, Np // bn, n_k)
-    mask = plane_block_mask(planes, bk, bn)
+    if plane_mask is not None:
+        assert plane_mask.shape == (n_bits, Kp // bk, Np // bn), plane_mask.shape
+        mask = plane_mask
+    else:
+        mask = plane_block_mask(unpack_bitplanes_bytes(packed, n_bits), bk, bn)
 
     out = pl.pallas_call(
         functools.partial(_kernel, n_k=n_k, n_bits=n_bits),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
-            pl.BlockSpec((n_bits, bk, bn), lambda m, n, k: (0, k, n)),
+            pl.BlockSpec((bk, bn), lambda m, n, k: (k, n)),
             pl.BlockSpec((n_bits, 1, 1), lambda m, n, k: (0, k, n)),
             pl.BlockSpec((1,), lambda m, n, k: (0,)),
             pl.BlockSpec((bn,), lambda m, n, k: (n,)),
@@ -118,5 +147,5 @@ def bitserial_matmul(
         out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
-    )(x_q, planes, mask, x_scale, w_scale)
+    )(x_q, packed, mask, x_scale, w_scale)
     return out[:M, :N]

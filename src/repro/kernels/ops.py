@@ -31,8 +31,13 @@ def on_tpu() -> bool:
 
 
 def pack_weights(w_q: jax.Array, n_bits: int = 8) -> jax.Array:
-    """Weight-load-time transpose to bit-plane layout (the TMU step)."""
-    return ref.pack_bitplanes(w_q, n_bits)
+    """Weight-load-time transpose to bit-plane layout (the TMU step).
+
+    Returns the dense **byte-packed** format ([K, N] uint8, bit b == plane
+    b): 8x smaller than the unpacked [n_bits, K, N] plane stack, unpacked
+    per tile in-kernel.  Pass the same ``n_bits`` to
+    :func:`bitserial_matmul` (the MSB plane carries the -2^(n-1) weight)."""
+    return ref.pack_bitplanes_bytes(w_q, n_bits)
 
 
 @functools.partial(jax.jit, static_argnames=("prefer_pallas",))
@@ -59,10 +64,21 @@ def flash_attention(q, k, v, *, causal: bool = True,
     return ref.flash_attention_ref(q, k, v, causal=causal)
 
 
-@functools.partial(jax.jit, static_argnames=("prefer_pallas",))
-def bitserial_matmul(x_q, planes, x_scale, w_scale, *, prefer_pallas: bool = False):
-    """Bit-serial (plane-decomposed) GEMM; cost scales with planes.shape[0]."""
+@functools.partial(jax.jit, static_argnames=("n_bits", "prefer_pallas"))
+def bitserial_matmul(x_q, planes, x_scale, w_scale, *, n_bits: int | None = None,
+                     prefer_pallas: bool = False):
+    """Bit-serial (plane-decomposed) GEMM; cost scales with the plane count.
+
+    ``planes`` is either the byte-packed [K, N] uint8 format from
+    :func:`pack_weights` (pass its ``n_bits``) or the legacy unpacked
+    [n_bits, K, N] {0,1} stack (``n_bits`` inferred)."""
+    if planes.ndim == 3:
+        n_bits = planes.shape[0]
+        unpacked = planes
+    else:
+        n_bits = 8 if n_bits is None else n_bits
+        unpacked = ref.unpack_bitplanes_bytes(planes, n_bits)
     if prefer_pallas or on_tpu():
-        return _bitserial_pallas(x_q, planes, x_scale, w_scale,
+        return _bitserial_pallas(x_q, planes, x_scale, w_scale, n_bits=n_bits,
                                  interpret=not on_tpu())
-    return ref.bitserial_matmul_ref(x_q, planes, x_scale, w_scale)
+    return ref.bitserial_matmul_ref(x_q, unpacked, x_scale, w_scale)

@@ -12,6 +12,8 @@ import jax.numpy as jnp
 __all__ = [
     "quant_matmul_ref",
     "pack_bitplanes",
+    "pack_bitplanes_bytes",
+    "unpack_bitplanes_bytes",
     "bitserial_matmul_ref",
     "flash_attention_ref",
 ]
@@ -45,6 +47,25 @@ def pack_bitplanes(w_q: jax.Array, n_bits: int = 8) -> jax.Array:
     w = w_q.astype(jnp.int32) & ((1 << n_bits) - 1)
     shifts = jnp.arange(n_bits, dtype=jnp.int32).reshape((n_bits,) + (1,) * w_q.ndim)
     return ((w[None] >> shifts) & 1).astype(jnp.int8)
+
+
+def pack_bitplanes_bytes(w_q: jax.Array, n_bits: int = 8) -> jax.Array:
+    """int8 weights -> [K, N] uint8 *byte-packed* planes: bit ``b`` of each
+    byte is plane ``b`` (two's complement over ``n_bits``).
+
+    This is the dense storage format for the bit-serial Pallas kernel: one
+    byte carries all (up to 8) planes of an element, so the kernel streams
+    8x less VMEM traffic than the unpacked [n_bits, K, N] int8 layout and
+    unpacks planes with a shift+mask per MXU pass, in-kernel.
+    """
+    assert 1 <= n_bits <= 8, n_bits
+    return (w_q.astype(jnp.int32) & ((1 << n_bits) - 1)).astype(jnp.uint8)
+
+
+def unpack_bitplanes_bytes(packed: jax.Array, n_bits: int = 8) -> jax.Array:
+    """[K, N] uint8 byte-packed -> [n_bits, K, N] {0,1} int8 planes
+    (inverse of :func:`pack_bitplanes_bytes`; oracle/XLA-path format)."""
+    return pack_bitplanes(packed.astype(jnp.int32), n_bits)
 
 
 def plane_weights(n_bits: int) -> jax.Array:

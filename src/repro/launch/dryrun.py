@@ -31,10 +31,11 @@ import jax
 
 from repro.configs import REGISTRY, get_config, shapes_for
 from repro.configs.base import SHAPES
-from repro.distributed.hlo_analysis import CollectiveStats, collective_bytes
+from repro.distributed.hlo_analysis import (CollectiveStats, collective_bytes,
+                                             xla_cost_analysis)
 from repro.distributed.hlo_loop_analysis import analyze_hlo
 from repro.distributed.roofline import TPU_V5E, roofline
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, set_mesh_compat
 from repro.launch.steps import build_jitted_step
 
 
@@ -50,13 +51,13 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     bundle = build_jitted_step(cfg, spec, mesh)
     # set_mesh (not `with mesh:`) — activation sharding constraints inside
     # the model read the abstract-mesh context at trace time.
-    with jax.set_mesh(mesh):
+    with set_mesh_compat(mesh):
         lowered = bundle.step.lower(*bundle.example_args)
         compiled = lowered.compile()
     t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost_raw = compiled.cost_analysis() or {}
+    cost_raw = xla_cost_analysis(compiled)
     hlo = compiled.as_text()
     # loop-aware: cost_analysis() charges every while body ONE iteration;
     # analyze_hlo multiplies by known_trip_count (scan-over-layers, flash

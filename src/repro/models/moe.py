@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.distributed.sharding import current_abstract_mesh
 from repro.models.layers import dense_init
 
 __all__ = ["moe_init", "moe_apply"]
@@ -24,7 +25,7 @@ def _ep_axes(cfg: ModelConfig):
     ride 'model'.  None when unconstrained (tests, single device)."""
     if cfg.act_spec is None:
         return None, None
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = current_abstract_mesh()
     if mesh is None or not mesh.axis_names:
         return None, None
     b = cfg.act_spec[0]

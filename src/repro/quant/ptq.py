@@ -107,7 +107,11 @@ def quantize_lm_params(params: Any, bits: int = 8,
             scale = scale.reshape(-1)
         out = {"q": q.astype(jnp.int8), "scale": scale.astype(jnp.float32)}
         if bits < 8:
+            # byte-packed planes (bit b of each uint8 == plane b); the
+            # plane count travels alongside — the MSB plane's -2^(bits-1)
+            # weight is not recoverable from the bytes alone.
             out["planes"] = K.pack_weights(q.astype(jnp.int32), bits)
+            out["plane_bits"] = bits
         return out
 
     return jax.tree_util.tree_map_with_path(leaf, params)
@@ -160,7 +164,8 @@ def bitserial_linear(x: jax.Array, wq: dict, x_qp: QuantParams,
     x2 = x.reshape(-1, x.shape[-1])
     xq, zp = _to_int8(quantize(x2, x_qp), x_qp)
     y = K.bitserial_matmul(xq, wq["planes"], jnp.float32(x_qp.scale),
-                           wq["scale"], prefer_pallas=prefer_pallas)
+                           wq["scale"], n_bits=int(wq.get("plane_bits", 8)),
+                           prefer_pallas=prefer_pallas)
     y = y + _zp_correction(wq, x_qp.scale, zp)
     return y.reshape(*lead, -1).astype(x.dtype)
 

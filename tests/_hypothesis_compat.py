@@ -1,0 +1,118 @@
+"""Deterministic stand-in for `hypothesis` when it isn't installed.
+
+The real library is preferred whenever importable; offline containers fall
+back to a fixed example sweep: each strategy first yields its boundary
+values, then values drawn from a per-test seeded ``numpy`` generator, so
+runs are reproducible and collection never fails on a missing dependency.
+
+Usage in test modules (drop-in for the common subset)::
+
+    from _hypothesis_compat import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only where hypothesis exists
+    from hypothesis import given, settings, strategies
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import zlib
+
+    import numpy as np
+
+    class _Strategy:
+        """A value source: boundary examples first, then seeded draws."""
+
+        def __init__(self, draw, edges=()):
+            self._draw = draw
+            self._edges = tuple(edges)
+
+        def example(self, rng, i):
+            if i < len(self._edges):
+                return self._edges[i]
+            return self._draw(rng)
+
+    class strategies:  # noqa: N801 - mimics the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)),
+                edges=(min_value, max_value),
+            )
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)),
+                             edges=(False, True))
+
+        @staticmethod
+        def floats(min_value, max_value, allow_nan=False):
+            del allow_nan  # the fallback never generates NaN
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)),
+                edges=(float(min_value), float(max_value)),
+            )
+
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(
+                lambda rng: options[int(rng.integers(len(options)))],
+                edges=tuple(options),
+            )
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                size = int(rng.integers(min_size, max_size + 1))
+                return [elements.example(rng, len(elements._edges) + j)
+                        for j in range(size)]
+
+            edge = [elements.example(np.random.default_rng(0), j)
+                    for j in range(max(min_size, 1))]
+            return _Strategy(draw, edges=(edge,))
+
+    def settings(max_examples: int = 10, deadline=None, **_kw):
+        """Record the requested example count on the decorated callable."""
+
+        def deco(fn):
+            fn._hyp_settings = {"max_examples": max_examples}
+            return fn
+
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        """Run the test over a deterministic sweep of examples."""
+
+        def deco(fn):
+            def wrapper():
+                conf = (getattr(wrapper, "_hyp_settings", None)
+                        or getattr(fn, "_hyp_settings", {}))
+                n = conf.get("max_examples", 10)
+                rng = np.random.default_rng(
+                    zlib.crc32(fn.__qualname__.encode()))
+                for i in range(n):
+                    args = [s.example(rng, i) for s in arg_strategies]
+                    kwargs = {k: s.example(rng, i)
+                              for k, s in kw_strategies.items()}
+                    try:
+                        fn(*args, **kwargs)
+                    except Exception as e:  # identify the failing example
+                        raise AssertionError(
+                            f"falsifying example #{i}: args={args!r} "
+                            f"kwargs={kwargs!r}") from e
+
+            # NOTE: deliberately no functools.wraps / __wrapped__ — pytest
+            # must see a zero-argument signature, not the strategy params.
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__module__ = fn.__module__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco
+
+
+__all__ = ["given", "settings", "strategies", "HAVE_HYPOTHESIS"]

@@ -63,7 +63,8 @@ def test_banded_flops_scale_with_window_not_context():
         q, k, v = _qkv(rng, 1, 2, 2, T, 16)
         f = jax.jit(lambda q, k, v: flash_attention(
             q, k, v, causal=True, window=64, q_chunk=64, kv_chunk=64))
-        c = f.lower(q, k, v).compile().cost_analysis()
+        from repro.distributed.hlo_analysis import xla_cost_analysis
+        c = xla_cost_analysis(f.lower(q, k, v).compile())
         return c["flops"]
 
     f1, f2 = flops(512), flops(1024)

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import bitserial as bs
 
@@ -183,3 +183,99 @@ def test_dot(k, seed):
     got, cycles = bs.bitserial_dot(jnp.asarray(x), jnp.asarray(w))
     assert int(got) == int((x.astype(np.uint64) * w).sum())
     assert cycles > 0
+
+
+# ---------------------------------------------------------------------------
+# packed bit-lane layout (32 lanes per uint32 word)
+# ---------------------------------------------------------------------------
+@given(n_bits=st.integers(1, 16), lanes=st.sampled_from([1, 7, 31, 32, 33, 64, 100]),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_pack_lanes_roundtrip(n_bits, lanes, seed):
+    """pack_lanes <-> unpack_lanes round-trips any lane count, including
+    non-multiples of 32 (zero-padded into the last word)."""
+    rng = np.random.default_rng(seed)
+    planes = (rng.integers(0, 2, size=(n_bits, lanes))).astype(np.uint8)
+    pp = bs.pack_lanes(planes)
+    assert pp.n_planes == n_bits
+    assert pp.lane_shape == (lanes,)
+    assert pp.n_words == -(-lanes // 32)
+    np.testing.assert_array_equal(np.asarray(bs.unpack_lanes(pp)), planes)
+
+
+def test_pack_lanes_multidim_roundtrip():
+    rng = np.random.default_rng(0)
+    planes = rng.integers(0, 2, size=(9, 3, 5, 7)).astype(np.uint8)  # 105 lanes
+    pp = bs.pack_lanes(planes)
+    assert pp.lane_shape == (3, 5, 7)
+    assert pp.n_words == 4  # 105 lanes -> 4 words, 23 pad lanes
+    np.testing.assert_array_equal(np.asarray(bs.unpack_lanes(pp)), planes)
+
+
+@given(lanes=st.sampled_from([1, 5, 31, 33, 63, 97]),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_packed_matches_unpacked_ops(lanes, seed):
+    """Ops fed PackedPlanes must agree bit-for-bit with the raw-plane path,
+    at every lane count (padding lanes must never leak)."""
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, 8, (lanes,))
+    b = _rand(rng, 8, (lanes,))
+    pa, pb = bs.bitplane_pack(jnp.asarray(a), 8), bs.bitplane_pack(jnp.asarray(b), 8)
+    qa, qb = bs.pack_lanes(pa), bs.pack_lanes(pb)
+
+    for op in (bs.bitserial_add, bs.bitserial_sub, bs.bitserial_multiply,
+               bs.bitserial_max):
+        raw, c_raw = op(pa, pb)
+        packed, c_packed = op(qa, qb)
+        assert isinstance(packed, bs.PackedPlanes)
+        assert c_raw == c_packed
+        np.testing.assert_array_equal(np.asarray(bs.unpack_lanes(packed)),
+                                      np.asarray(raw))
+
+    raw, c_raw = bs.bitserial_relu(pa)
+    packed, c_packed = bs.bitserial_relu(qa)
+    assert c_raw == c_packed
+    np.testing.assert_array_equal(np.asarray(bs.unpack_lanes(packed)),
+                                  np.asarray(raw))
+
+    raw, c_raw = bs.bitserial_reduce(pa)
+    packed, c_packed = bs.bitserial_reduce(qa)
+    assert c_raw == c_packed
+    np.testing.assert_array_equal(np.asarray(bs.unpack_lanes(packed)),
+                                  np.asarray(raw))
+
+
+def test_packed_ops_under_jit():
+    """The scan-based traced path (inside jax.jit) matches the host path."""
+    rng = np.random.default_rng(11)
+    a = _rand(rng, 8, (45,))
+    b = _rand(rng, 8, (45,))
+
+    @jax.jit
+    def pipeline(av, bv):
+        pa = bs.bitplane_pack(av, 8)
+        pb = bs.bitplane_pack(bv, 8)
+        s, _ = bs.bitserial_add(pa, pb)
+        p, _ = bs.bitserial_multiply(pa, pb)
+        r, _ = bs.bitserial_reduce(p)
+        return s, p, r
+
+    s, p, r = pipeline(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_array_equal(np.asarray(bs.bitplane_unpack(s)),
+                                  a.astype(np.uint64) + b)
+    np.testing.assert_array_equal(np.asarray(bs.bitplane_unpack(p)),
+                                  a.astype(np.uint64) * b)
+    assert int(np.asarray(bs.bitplane_unpack(r))[0]) == int(
+        (a.astype(np.uint64) * b).sum())
+
+
+def test_selective_copy_packed_mask():
+    rng = np.random.default_rng(4)
+    dst = bs.bitplane_pack(jnp.asarray(_rand(rng, 8, (40,))), 8)
+    src = bs.bitplane_pack(jnp.asarray(_rand(rng, 8, (40,))), 8)
+    mask = rng.integers(0, 2, size=(40,)).astype(np.uint8)
+    out, cyc = bs.selective_copy(dst, src, mask)
+    want = np.where(mask[None, :].astype(bool), np.asarray(src), np.asarray(dst))
+    np.testing.assert_array_equal(np.asarray(out), want)
+    assert cyc == 9

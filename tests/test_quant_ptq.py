@@ -19,6 +19,7 @@ def _wq(key, k=64, n=48, bits=8):
     out = {"q": q, "scale": scale.reshape(-1)}
     if bits < 8:
         out["planes"] = K.pack_weights(q.astype(jnp.int32), bits)
+        out["plane_bits"] = bits
     return w, out
 
 

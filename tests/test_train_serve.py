@@ -19,10 +19,13 @@ def _train(steps, ckpt_dir=None, **kw):
 
 
 def test_train_loss_decreases():
-    _, _, hist = _train(12)
+    # Long enough that the warmup-ramped LR accumulates real progress;
+    # batch-mean losses are compared (single-batch loss noise is ~+-0.02,
+    # the same order as a dozen steps' worth of learning).
+    _, _, hist = _train(120)
     losses = [h["loss"] for h in hist]
     assert np.isfinite(losses).all()
-    assert losses[-1] < losses[0]
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.01
 
 
 def test_train_checkpoint_resume_is_deterministic(tmp_path):
