@@ -73,6 +73,19 @@ def _emulation_rows():
     _, us = timed(lambda: nc.nc_maxpool2d(jnp.asarray(xq), 2, 2))
     out.append(_rec("emulation/nc_maxpool2d", us, "28x28x8 w2 s2",
                     "14x14x8 lanes in lockstep"))
+
+    # end-to-end: reduced Inception v3 stem through the emulation (tiled,
+    # packed-resident; per-layer cycles reported by nc_forward)
+    import jax as _jax
+    from repro.models import inception
+    cfg = inception.reduced_config(img=63, width_div=8, classes=8, stages=())
+    params = inception.init_params(_jax.random.PRNGKey(0), config=cfg)
+    img = _jax.random.uniform(_jax.random.PRNGKey(1), (63, 63, 3), jnp.float32)
+    (_, report), us = timed(
+        lambda: inception.nc_forward(params, img, config=cfg), iters=1)
+    out.append(_rec("emulation/inception_stem", us, "63px /8 widths stem",
+                    f"{len(report.layers)} layers, "
+                    f"{report.total_emulated_cycles} emulated cycles"))
     return out
 
 
@@ -109,6 +122,21 @@ def run():
         out.append(_rec(f"kernel/bitserial_{bits}b", us, f"{M}x{Kdim}x{N}",
                         f"{bits} planes byte-packed; HLO flops "
                         f"{flops/base_flops:.2f}x of 8b"))
+
+    # W4A4: byte-packing extended to the activations (2 elements/byte,
+    # 2 half-K MXU passes per plane) — flops still plane-proportional
+    from repro.kernels import ref as kref
+    x4 = jax.random.randint(k1, (M, Kdim), -8, 8, jnp.int8)
+    w4, ws4 = quantize_per_channel(w, bits=4)
+    xp4 = kref.pack_activation_nibbles(x4)
+    wp4 = K.pack_weights(w4.astype(jnp.int32), 4)
+    fn4 = jax.jit(lambda a, p: K.bitserial_matmul_a4(
+        a, p, qp.scale, ws4.reshape(-1), k=Kdim))
+    flops4 = xla_cost_analysis(fn4.lower(xp4, wp4).compile()).get("flops", 0)
+    _, us = timed(lambda: jax.block_until_ready(fn4(xp4, wp4)))
+    out.append(_rec("kernel/bitserial_w4a4_packed_act", us, f"{M}x{Kdim}x{N}",
+                    f"2 elems/byte activations; HLO flops "
+                    f"{flops4/base_flops:.2f}x of 8b"))
 
     out.extend(_emulation_rows())
     return out

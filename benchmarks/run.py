@@ -1,8 +1,13 @@
 """Benchmark harness — one module per paper table/figure, plus kernel and
 LM-architecture benches.  Prints ``name,us_per_call,derived`` CSV and dumps
 the kernel/emulation rows to ``BENCH_kernels.json`` (a machine-readable
-perf baseline: op, shape, wall-time, plane-count scaling) so later PRs can
-compare against this one."""
+perf baseline: op, shape, wall-time, plane-count scaling).
+
+Perf-regression gate: before refreshing the baseline, every new record is
+diffed against the previous ``BENCH_kernels.json`` — any recorded op that
+got more than ``REGRESSION_THRESHOLD`` x slower is flagged on stderr and
+listed under ``notes.regressions`` in the refreshed file, so a later PR's
+run makes its own slowdowns visible."""
 from __future__ import annotations
 
 import importlib
@@ -24,16 +29,42 @@ MODULES = [
 
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_kernels.json"
 
-# Measured on the CI container for this PR (word-packed bit-plane engine
-# vs the per-lane uint8 seed emulation); kept as provenance next to the
-# fresh numbers dumped on every run.
+REGRESSION_THRESHOLD = 1.3  # flag ops that got >1.3x slower than baseline
+
+# Measured on the CI container (PR 2: packed-resident tiled layer pipeline
+# vs PR 1's word-packed engine, vs the per-lane uint8 seed emulation);
+# kept as provenance next to the fresh numbers dumped on every run.
 SPEEDUP_NOTES = {
-    "emulation_engine": "packed 32-lane uint32 words, numpy fast path / "
-                        "lax.scan traced path",
+    "emulation_engine": "packed-resident row-aligned words; tiled conv "
+                        "(pixels x filters, geometry-bounded) reusing packed "
+                        "window planes across filters; EIE-style zero-operand "
+                        "word skipping; bucketed-jit engine cache",
     "emulation_suite_seed_s": 14.45,   # pytest tests/test_nc_layers.py @ seed
-    "emulation_suite_now_s": 2.5,      # same module, packed engine
+    "emulation_suite_now_s": 2.5,      # same module, packed engine (PR 1)
     "emulation_speedup_vs_seed": 5.8,  # wall; per-op bodies are >20x
+    "nc_conv2d_pr1_us": 168421.96,     # 14x14x8 * 3x3x8x16 @ PR 1 baseline
 }
+
+
+def diff_records(old_payload: dict | None, records: list[dict],
+                 threshold: float = REGRESSION_THRESHOLD) -> list[dict]:
+    """Compare fresh records against a previous baseline payload; return
+    the ops that regressed by more than ``threshold`` x."""
+    if not old_payload:
+        return []
+    prev = {r["op"]: r.get("us_per_call", 0.0)
+            for r in old_payload.get("records", [])}
+    regressions = []
+    for r in records:
+        before = prev.get(r["op"], 0.0)
+        if before > 0 and r["us_per_call"] > threshold * before:
+            regressions.append({
+                "op": r["op"],
+                "before_us": before,
+                "after_us": r["us_per_call"],
+                "ratio": round(r["us_per_call"] / before, 2),
+            })
+    return regressions
 
 
 def _dump_kernel_records() -> None:
@@ -44,10 +75,19 @@ def _dump_kernel_records() -> None:
         return
     if not records:
         return
-    payload = {"records": records, "notes": SPEEDUP_NOTES}
+    try:
+        previous = json.loads(BENCH_JSON.read_text())
+    except Exception:
+        previous = None
+    regressions = diff_records(previous, records)
+    for reg in regressions:
+        print(f"# PERF REGRESSION {reg['op']}: {reg['before_us']:.1f} us -> "
+              f"{reg['after_us']:.1f} us ({reg['ratio']}x)", file=sys.stderr)
+    notes = dict(SPEEDUP_NOTES, regressions=regressions)
+    payload = {"records": records, "notes": notes}
     BENCH_JSON.write_text(json.dumps(payload, indent=2) + "\n")
-    print(f"# wrote {BENCH_JSON.name} ({len(records)} records)",
-          file=sys.stderr)
+    print(f"# wrote {BENCH_JSON.name} ({len(records)} records, "
+          f"{len(regressions)} regressions)", file=sys.stderr)
 
 
 def main() -> None:

@@ -158,13 +158,21 @@ def map_layer(spec: LayerSpec, geom: CacheGeometry = XEON_E5_35MB) -> MappedLaye
 def check_wordline_budget(m: MappedLayer, geom: CacheGeometry = XEON_E5_35MB) -> int:
     """Word lines used by one bit line's working set (Figure 10): filter +
     streamed input + 3B partial sum + 2B scratch.  Returns free lines
-    (>=0 required; the slack stores outputs + reused inputs)."""
+    (>=0 required; the slack stores outputs + reused inputs).
+
+    Consulted by the conv tiler (core/nc_layers.py) before any lanes are
+    allocated: a layer that overflows the budget raises here, with the
+    offending spec, instead of silently over-allocating word lines the
+    modeled array does not have."""
     filt = m.line_filter_bytes * 8
     inp = 8 if m.pack_factor > 1 else m.line_filter_bytes * 8  # §IV-A: 1x1 streams 1B
     used = filt + inp + 3 * 8 + 2 * 8
     free = geom.array_rows - used
     if free < 0:
-        raise ValueError(f"{m.spec.name}: word-line budget exceeded ({used}/{geom.array_rows})")
+        raise ValueError(
+            f"word-line budget exceeded: {used} lines needed, {geom.array_rows} "
+            f"per array ({geom.name}); split the filter further or shrink the "
+            f"working set — offending layer: {m.spec}")
     return free
 
 

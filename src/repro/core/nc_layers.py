@@ -6,18 +6,36 @@ would — uint8 operands, bit-plane transposed layout, tag-predicated MACs,
 in-array log-tree channel reduction, fixed-point requantization — and is
 validated against jnp oracles in tests/test_nc_layers.py.
 
-All output pixels and filters are *lanes*: conv extracts every RxSxC window
-up front and runs ONE packed MAC + log-tree reduction over (E, F, M, K)
-lanes, exactly the way the cache computes every output in lockstep (and the
-way the word-packed engine in core/bitserial.py wants its work: 32 lanes
-per uint32 word, no Python loops over pixels).  Layer cycle counts are
-Python ints (these functions are inherently eager, like the per-pixel
-formulation before them), so the layer math runs on the engine's host
-(numpy) fast path; accounting is unchanged: each lane group still reports
-``per_dot_cycles * n_dots`` — the emulation got faster, the modeled
-hardware did not.  The TPU-fast path lives in repro/kernels.
+Packed-resident, tiled pipeline
+-------------------------------
+The engine's :class:`~repro.core.bitserial.PackedPlanes` word format is the
+resident representation end to end: operands are packed straight into
+row-aligned word space (``pack_values(..., row_align=True)``), the MAC and
+the §III-D log-tree reduction run on words, and only the final per-row sums
+are decoded — no per-lane plane tensor is ever materialized.
+
+Work is tiled over **output pixels x filters** the way the mapper
+serializes passes (core/mapper.py): a tile's lane count is bounded by the
+cache geometry (``geom.compute_slots`` bit lines), so peak host memory
+follows the modeled hardware instead of E*F*M*K.  Within a tile, the
+packed *window* rows are packed once and broadcast across every filter at
+word granularity (and the packed filter rows across every pixel) — the
+word-level analogue of filter replication across arrays (§IV-B).  The
+tiler consults ``mapper.check_wordline_budget`` and refuses layers whose
+per-bit-line working set cannot fit the modeled array.
+
+Layer cycle counts are Python ints and are *unchanged* by tiling or
+packing: each (pixel, filter) lane group still reports the same
+``per_dot_cycles`` (mul + accumulate + log-tree), so total modeled cycles
+are bit-identical to the untiled formulation — the emulation got faster,
+the modeled hardware did not.  ``engine="jit"`` routes tiles through the
+bucketed compiled engine (see core/bitserial.py) for sweep workloads.
+
+The TPU-fast path lives in repro/kernels.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -25,24 +43,58 @@ import numpy as np
 
 from repro.core import bitserial as bs
 from repro.core import quantize as q
+from repro.core.cache_geometry import CacheGeometry, XEON_E5_35MB
+from repro.core.mapper import LayerSpec, check_wordline_budget, map_layer
 
-__all__ = ["nc_dot", "nc_conv2d", "nc_maxpool2d", "nc_relu_requant", "nc_fc"]
+__all__ = [
+    "nc_dot",
+    "nc_conv2d",
+    "nc_maxpool2d",
+    "nc_avgpool2d",
+    "nc_relu_requant",
+    "nc_fc",
+    "ConvStats",
+]
 
 
-def nc_dot(x_q, w_q, acc_bits: int = 24):
+@dataclasses.dataclass(frozen=True)
+class ConvStats:
+    """Per-layer emulation accounting notes (cycles stay formula-exact)."""
+
+    lanes: int  # E*F*M*K MAC lanes
+    zero_operand_lanes: int  # lanes a tag latch could predicate off (EIE-style)
+    tiles: int
+    tile_pixels: int
+    tile_filters: int
+    serial_passes: int  # mapper's modeled pass count for the layer
+    engine_words_total: int  # host-engine word columns seen by the multiplier
+    engine_words_skipped: int  # word columns elided (all-zero operand)
+
+
+def nc_dot(x_q, w_q, acc_bits: int = 24, n_bits: int = 8):
     """Quantized dot products, one per bit-line group.
 
     x_q: [..., K] uint8 inputs, w_q: [..., K] uint8 filters (same shape).
-    Each of the K lanes performs one 8-bit MAC into a ``acc_bits``-bit
+    Each of the K lanes performs one ``n_bits`` MAC into a ``acc_bits``-bit
     partial sum, then the lanes reduce via the in-array log tree.  Returns
     (int values [...], cycles) — bit-exact with the integer dot product.
+
+    Packed-resident: operands go straight to row-aligned words and the
+    MAC feeds the reducer without leaving packed space.
     """
-    xp = bs.bitplane_pack(np.asarray(x_q, np.uint32), 8)
-    wp = bs.bitplane_pack(np.asarray(w_q, np.uint32), 8)
-    acc = np.zeros((acc_bits,) + xp.shape[1:], np.uint8)
-    acc, c_mac = bs.bitserial_mac(acc, xp, wp)
-    red, c_red = bs.bitserial_reduce(acc)
-    return bs.bitplane_unpack(red)[..., 0], c_mac + c_red
+    x_q = np.asarray(x_q)
+    w_q = np.asarray(w_q)
+    K = x_q.shape[-1]
+    P, wpr, r = bs._row_layout(K)
+    xw = bs.pack_values(x_q, n_bits, row_align=True).words
+    ww = bs.pack_values(w_q, n_bits, row_align=True).words
+    if r == 1:
+        xw = xw.reshape(n_bits, -1, wpr)
+        ww = ww.reshape(n_bits, -1, wpr)
+    vals, cycles = bs.packed_dot_words(xw, ww, K=K, acc_bits=acc_bits)
+    n_rows = int(np.prod(x_q.shape[:-1])) if x_q.ndim > 1 else 1
+    vals = np.asarray(vals).reshape(-1)[:n_rows]
+    return vals.reshape(x_q.shape[:-1]), cycles
 
 
 def _quantize_np(x, qp: q.QuantParams) -> np.ndarray:
@@ -52,6 +104,14 @@ def _quantize_np(x, qp: q.QuantParams) -> np.ndarray:
     zp = int(qp.zero_point)
     vals = np.round(np.asarray(x, np.float32) / scale) + zp
     return np.clip(vals, qp.qmin, qp.qmax).astype(np.int64)
+
+
+def _same_pad(h: int, r: int, stride: int) -> tuple[int, int]:
+    """TF/lax SAME convention: total pad so out = ceil(h/stride); extra
+    padding goes after (bottom/right)."""
+    out = -(-h // stride)
+    total = max((out - 1) * stride + r - h, 0)
+    return total // 2, total - total // 2
 
 
 def _extract_windows(x: np.ndarray, R: int, S: int, stride: int):
@@ -65,72 +125,249 @@ def _extract_windows(x: np.ndarray, R: int, S: int, stride: int):
     return win.transpose(0, 2, 1, 3, 4).reshape(E, F, R * S * C), E, F
 
 
+def _pack_x_rows(rows: np.ndarray, n_bits: int) -> np.ndarray:
+    """Window rows (T, K) -> broadcastable word grid (n, 1, ...) shared by
+    every filter in the tile (the packed-plane reuse across filters)."""
+    K = rows.shape[-1]
+    P, wpr, r = bs._row_layout(K)
+    w = bs.pack_values(rows, n_bits, row_align=True).words
+    if r == 1:
+        return w.reshape(n_bits, 1, rows.shape[0], wpr)
+    return w.reshape(n_bits, 1, -1)  # (n, 1, ceil(T/r)) — rows share words
+
+
+def _pack_w_rows(rows: np.ndarray, n_bits: int) -> np.ndarray:
+    """Filter rows (M, K) -> broadcastable word grid (n, M, 1[, wpr]).
+
+    For P < 32 each word of the dot grid holds 32/P *pixel* rows of one
+    filter, so the filter's P-bit pattern is replicated across the word."""
+    K = rows.shape[-1]
+    P, wpr, r = bs._row_layout(K)
+    if r == 1:
+        w = bs.pack_values(rows, n_bits, row_align=True).words
+        return w.reshape(n_bits, rows.shape[0], 1, wpr)
+    rep = sum(1 << (j * P) for j in range(r))
+    ks = np.arange(K, dtype=np.uint64)
+    out = np.empty((n_bits, rows.shape[0]), np.uint64)
+    rows = rows.astype(np.uint64)
+    for p in range(n_bits):
+        rowval = (((rows >> np.uint64(p)) & 1) << ks).sum(axis=1)
+        out[p] = rowval * rep
+    return out.astype(np.uint32)[:, :, None]
+
+
+def _conv_tiles(E: int, F: int, M: int, K: int,
+                geom: CacheGeometry,
+                tile_pixels: int | None,
+                tile_filters: int | None) -> tuple[int, int]:
+    """Default tile sizes: bound a tile's bit-line count (rows x P padded
+    lanes) by the cache's compute slots, preferring whole-pixel tiles."""
+    P = bs._row_layout(K)[0]
+    cap = max(geom.compute_slots, P)
+    # clamp caller-supplied sizes first so the derived dimension is sized
+    # for the effective tile, not an oversized request
+    if tile_pixels is not None:
+        tile_pixels = min(tile_pixels, E * F)
+    if tile_filters is not None:
+        tile_filters = min(tile_filters, M)
+    if tile_pixels is None and tile_filters is None:
+        if P * E * F * M <= cap:
+            return E * F, M
+        tf = cap // (P * E * F)
+        if tf >= 1:
+            return E * F, int(tf)
+        return max(1, cap // P), 1
+    if tile_filters is None:
+        tile_filters = max(1, min(M, cap // (P * tile_pixels)))
+    if tile_pixels is None:
+        tile_pixels = max(1, min(E * F, cap // (P * tile_filters)))
+    return min(tile_pixels, E * F), min(tile_filters, M)
+
+
 def nc_conv2d(
     x: jax.Array,
     w: jax.Array,
     x_qp: q.QuantParams,
     w_qp: q.QuantParams,
     stride: int = 1,
+    *,
+    padding: str = "VALID",
+    tile_pixels: int | None = None,
+    tile_filters: int | None = None,
+    geom: CacheGeometry = XEON_E5_35MB,
+    layer_spec: LayerSpec | None = None,
+    engine: str = "host",
+    return_stats: bool = False,
 ):
-    """Quantized VALID conv through the array model.
+    """Quantized conv through the array model (packed-resident + tiled).
 
-    x: [H, W, C] float, w: [R, S, C, M] float.  Both are quantized to uint8
-    (zero-point affine), the cross terms of (x-zx)(w-zw) are handled exactly
-    as the integer expansion, and the result is returned as int32 — what the
-    reserved-way staging would hold before requantization.
+    x: [H, W, C] float, w: [R, S, C, M] float.  Both are quantized
+    (zero-point affine, ``qp.bits`` planes), the cross terms of
+    (x-zx)(w-zw) are handled exactly as the integer expansion, and the
+    result is returned as int32 — what the reserved-way staging would hold
+    before requantization.  ``padding="SAME"`` pads with the quantized
+    zero point (exact under the affine identity).
 
-    Every (output pixel, filter) pair is a lane group: one packed MAC +
-    reduction computes the whole [E, F, M] output in lockstep.  Peak host
-    memory scales with E*F*M*K lanes (~40 bit-planes of packed words plus
-    the uint8 window broadcast) — emulation-scale layers only; tile over
-    output pixels or filters before pointing this at ImageNet-size layers.
+    Every (output pixel, filter) pair is a lane group.  Work is tiled over
+    output pixels and filters so a tile's bit lines fit the cache geometry
+    (peak memory is bounded by ``geom.compute_slots``, not E*F*M*K); the
+    packed window rows of a pixel tile are packed once and broadcast
+    across every filter.  Cycle accounting is unchanged by tiling: each
+    lane group reports the same ``per_dot_cycles`` as the untiled
+    formulation.
+
+    ``engine="jit"`` runs tiles through the bucketed compiled engine
+    (tiles are padded to a uniform shape so one executable serves the
+    whole layer); ``return_stats=True`` appends a :class:`ConvStats` with
+    the EIE-style zero-operand skip counts.
     """
     xq = _quantize_np(np.asarray(x), x_qp)
     wq = _quantize_np(np.asarray(w), w_qp)
     R, S, Cw, M = wq.shape
     assert xq.shape[2] == Cw
+    if padding == "SAME":
+        ph = _same_pad(xq.shape[0], R, stride)
+        pw = _same_pad(xq.shape[1], S, stride)
+        xq = np.pad(xq, (ph, pw, (0, 0)),
+                    constant_values=int(x_qp.zero_point))
+    elif padding != "VALID":
+        raise ValueError(f"padding must be VALID or SAME, got {padding!r}")
+    H = xq.shape[0]
     win, E, F = _extract_windows(xq, R, S, stride)  # (E, F, K)
     K = R * S * Cw
+    n_bits = max(x_qp.bits, w_qp.bits)
+    acc_bits = 32
 
-    # lanes = E x F x M x K (filter splitting across lines is a layout
-    # detail; arithmetic is identical) — all pixels/filters in lockstep
-    xb = np.broadcast_to(win[:, :, None, :], (E, F, M, K))
-    wb = np.broadcast_to(wq.reshape(K, M).T[None, None], (E, F, M, K))
-    val, cyc = nc_dot(xb.astype(np.uint8), wb.astype(np.uint8), acc_bits=32)
-    total_cycles = int(cyc) * E * F * M  # per-dot cost, one dot per (e,f,m)
+    # mapper contract: refuse layers whose bit-line working set overflows
+    # the array's word lines (a silent over-allocation in hardware).
+    spec = layer_spec or LayerSpec(
+        name="nc_conv2d", kind="conv", H=H, R=R, S=S, C=Cw, M=M, E=E,
+        stride=stride)
+    mapped = map_layer(spec, geom)
+    check_wordline_budget(mapped, geom)
+
+    tile_pixels, tile_filters = _conv_tiles(E, F, M, K, geom, tile_pixels,
+                                            tile_filters)
+
+    win_flat = win.reshape(E * F, K).astype(np.uint8 if n_bits <= 8
+                                            else np.uint32)
+    w_rows = wq.reshape(K, M).T.astype(np.uint8 if n_bits <= 8 else np.uint32)
+    # filters packed once for the whole layer; tiles slice the word grid
+    ww_all = _pack_w_rows(w_rows, w_qp.bits)
+
+    skip0_words = bs.SKIP_STATS.words_total
+    skip0_skipped = bs.SKIP_STATS.words_skipped
+    per_dot = bs.dot_cycles(K, n_bits, acc_bits)
+    out = np.empty((E * F, M), np.int64)
+    n_tiles = 0
+    # jit engine: pad every tile (ragged tails included) to the layer's
+    # bucket_words sizes so one compiled executable serves the whole layer
+    # (and any other layer landing on the same bucket)
+    bt = bs.bucket_words(tile_pixels) if engine == "jit" else tile_pixels
+    bf = bs.bucket_words(tile_filters) if engine == "jit" else None
+    for p0 in range(0, E * F, tile_pixels):
+        p1 = min(p0 + tile_pixels, E * F)
+        rows = win_flat[p0:p1]
+        if engine == "jit" and rows.shape[0] < bt:
+            rows = np.pad(rows, ((0, bt - rows.shape[0]), (0, 0)))
+        xw = _pack_x_rows(rows, x_qp.bits)
+        for m0 in range(0, M, tile_filters):
+            m1 = min(m0 + tile_filters, M)
+            ww = ww_all[:, m0:m1]
+            if engine == "jit" and m1 - m0 < bf:
+                pad = ((0, 0), (0, bf - (m1 - m0))) + ((0, 0),) * (ww.ndim - 2)
+                ww = np.pad(ww, pad)
+            vals, _ = bs.packed_dot_words(xw, ww, K=K, acc_bits=acc_bits,
+                                          engine=engine)
+            vals = np.asarray(vals)  # (Mt, T[, expanded rows])
+            out[p0:p1, m0:m1] = vals[: m1 - m0, : p1 - p0].T
+            n_tiles += 1
+    total_cycles = per_dot * E * F * M  # per-dot cost, one dot per (e,f,m)
 
     # affine-zero-point correction (done by the accumulating requant step
     # in-cache; exact integer identity)
     sx = win.sum(axis=-1)  # (E, F)
     sw = wq.sum(axis=(0, 1, 2))  # (M,)
-    out = (
-        val.astype(np.int64)
+    acc = (
+        out.reshape(E, F, M)
         - int(w_qp.zero_point) * sx[:, :, None]
         - int(x_qp.zero_point) * sw[None, None, :]
         + K * int(x_qp.zero_point) * int(w_qp.zero_point)
     )
-    return jnp.asarray(out, jnp.int32), total_cycles
+    result = jnp.asarray(acc, jnp.int32)
+    if not return_stats:
+        return result, total_cycles
+    # separable zero-operand count: sum_k (#zero-free windows_k)*(#zero-free w_k)
+    cx = (win_flat != 0).sum(axis=0).astype(np.int64)  # (K,)
+    cw = (w_rows != 0).sum(axis=0).astype(np.int64)  # (K,)
+    live = int((cx * cw).sum())
+    stats = ConvStats(
+        lanes=E * F * M * K,
+        zero_operand_lanes=E * F * M * K - live,
+        tiles=n_tiles,
+        tile_pixels=tile_pixels,
+        tile_filters=tile_filters,
+        serial_passes=mapped.serial_passes,
+        engine_words_total=bs.SKIP_STATS.words_total - skip0_words,
+        engine_words_skipped=bs.SKIP_STATS.words_skipped - skip0_skipped,
+    )
+    return result, total_cycles, stats
 
 
-def nc_maxpool2d(x_q: jax.Array, window: int, stride: int):
+def nc_maxpool2d(x_q: jax.Array, window: int, stride: int,
+                 padding: str = "VALID"):
     """uint8 max pooling via subtract + MSB-masked copies (§IV-D).
 
     All E x F x C output lanes advance in lockstep through the window^2 - 1
     sequential max steps (cycle count stays per-pixel, as the per-pixel
     formulation reported it)."""
-    win, E, F = _extract_windows(np.asarray(x_q, np.int64), window, window,
-                                 stride)
+    xq = np.asarray(x_q, np.int64)
+    if padding == "SAME":
+        ph = _same_pad(xq.shape[0], window, stride)
+        pw = _same_pad(xq.shape[1], window, stride)
+        xq = np.pad(xq, (ph, pw, (0, 0)))  # uint8 min
+    win, E, F = _extract_windows(xq, window, window, stride)
     C = x_q.shape[2]
     win = win.reshape(E, F, window * window, C)
-    cur = bs.pack_lanes(bs.bitplane_pack(win[:, :, 0].astype(np.uint32), 8))
+    cur = bs.pack_values(win[:, :, 0].astype(np.uint32), 8)
     cycles = 0
     for t in range(1, window * window):
-        nxt = bs.pack_lanes(bs.bitplane_pack(win[:, :, t].astype(np.uint32), 8))
+        nxt = bs.pack_values(win[:, :, t].astype(np.uint32), 8)
         cur, c = bs.bitserial_max(cur, nxt)
         cur = cur[:8]
         cycles += c * E * F
-    out = bs.bitplane_unpack(cur)  # (E, F, C)
+    out = bs.unpack_values(cur)  # (E, F, C)
     return jnp.asarray(out, jnp.uint8), cycles
+
+
+def nc_avgpool2d(x_q: jax.Array, window: int, stride: int,
+                 padding: str = "VALID"):
+    """uint8 average pooling: in-array window-sum via the §III-D log tree,
+    then the §III-C bit-serial divide (rounded; SAME padding divides by the
+    pad-excluded window population, matching the float reference).
+
+    Cycles per output lane group: the widening sum tree over the window
+    plus one 8-bit divide."""
+    xq = np.asarray(x_q, np.int64)
+    H, W, C = xq.shape
+    ones = np.ones((H, W, 1), np.int64)
+    if padding == "SAME":
+        ph = _same_pad(H, window, stride)
+        pw = _same_pad(W, window, stride)
+        xq = np.pad(xq, (ph, pw, (0, 0)))
+        ones = np.pad(ones, (ph, pw, (0, 0)))
+    win, E, F = _extract_windows(xq, window, window, stride)  # (E,F,W2*C)
+    w2 = window * window
+    # reduce axis last: (E, F, C, W2) rows of the window population
+    rows = win.reshape(E, F, w2, C).transpose(0, 1, 3, 2).astype(np.uint32)
+    pp = bs.pack_values(rows, 8, row_align=True)
+    red, c_red = bs.bitserial_reduce(pp)
+    sums = bs.unpack_values(red)[..., 0]  # (E, F, C)
+    counts, _, _ = _extract_windows(ones, window, window, stride)
+    counts = counts.reshape(E, F, w2, 1).sum(axis=2)  # (E, F, 1)
+    out = (sums + counts // 2) // counts  # rounded integer divide
+    cycles = int(E * F * (c_red + bs.div_cycles(8)))
+    return jnp.asarray(np.clip(out, 0, 255), jnp.uint8), cycles
 
 
 def nc_relu_requant(
@@ -143,8 +380,14 @@ def nc_relu_requant(
     return q.requantize_fixedpoint(acc, m, s, zero_point=out_zp).astype(jnp.uint8)
 
 
-def nc_fc(x: jax.Array, w: jax.Array, x_qp: q.QuantParams, w_qp: q.QuantParams):
-    """FC as a 1x1 conv over a 1x1 'image' (§IV-D)."""
-    out, cycles = nc_conv2d(np.asarray(x)[None, None, :],
-                            np.asarray(w)[None, None, :, :], x_qp, w_qp)
+def nc_fc(x: jax.Array, w: jax.Array, x_qp: q.QuantParams, w_qp: q.QuantParams,
+          **conv_kwargs):
+    """FC as a 1x1 conv over a 1x1 'image' (§IV-D); tiling kwargs pass
+    through to :func:`nc_conv2d`."""
+    res = nc_conv2d(np.asarray(x)[None, None, :],
+                    np.asarray(w)[None, None, :, :], x_qp, w_qp, **conv_kwargs)
+    if len(res) == 3:
+        out, cycles, stats = res
+        return out[0, 0], cycles, stats
+    out, cycles = res
     return out[0, 0], cycles

@@ -33,7 +33,7 @@ from repro.core.cache_geometry import CacheGeometry, XEON_E5_35MB
 from repro.core.mapper import LayerSpec, MappedLayer, map_layer
 
 __all__ = ["SimConstants", "LayerResult", "NetworkResult", "simulate_layer",
-           "simulate_network", "throughput", "PAPER"]
+           "simulate_network", "modeled_layer_cycles", "throughput", "PAPER"]
 
 MIB = 1 << 20
 
@@ -201,6 +201,31 @@ def simulate_layer(
     )
     return LayerResult(spec, m, mac_s, reduce_s, quant_s, 0.0, filter_s,
                        input_s, output_s, per_conv, energy)
+
+
+def modeled_layer_cycles(
+    spec: LayerSpec,
+    geom: CacheGeometry = XEON_E5_35MB,
+    const: SimConstants = SimConstants(),
+) -> dict:
+    """Paper-style modeled compute cycles for one layer: the mapper's
+    serialized passes times the per-pass cost (MAC + log-tree + staging).
+
+    This is the analytic counterpart of the emulation's arithmetic cycle
+    count (core/nc_layers.py): the emulation charges the §III formulas per
+    lane group, the model charges the calibrated per-pass constants per
+    serialized pass — models/inception.py's ``nc_forward`` reports both
+    side by side."""
+    res = simulate_layer(spec, geom, const)
+    per_pass = res.compute_cycles_per_pass
+    passes = res.mapped.serial_passes
+    return dict(
+        per_pass_cycles=per_pass,
+        serial_passes=passes,
+        total_cycles=per_pass * passes,
+        compute_s=res.compute_s,
+        total_s=res.total_s,
+    )
 
 
 @dataclasses.dataclass(frozen=True)

@@ -38,6 +38,14 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.ref import (pack_bitplanes_bytes, plane_weights,
                                unpack_bitplanes_bytes)
 
+# W4A4 (bitserial_matmul_a4): byte-packing extends to the *activation*
+# operand — two 4-bit elements per byte (ref.pack_activation_nibbles), so
+# both operand tiles move half the VMEM bytes.  Each weight plane then
+# costs two MXU passes over half-K (even nibbles @ even plane rows + odd @
+# odd): identical MAC count per plane, so total HLO FLOPs still scale with
+# the plane count (4-bit ~ 0.5x of the 8-bit kernel; asserted in
+# tests/test_kernels.py).
+
 DEFAULT_BM = 128
 DEFAULT_BN = 128
 DEFAULT_BK = 256
@@ -61,6 +69,37 @@ def _kernel(x_ref, p_ref, mask_ref, xs_ref, ws_ref, o_ref, acc_ref, *, n_k: int,
                 x_ref[...].astype(jnp.int32), plane,
                 preferred_element_type=jnp.int32,
             )
+            acc_ref[...] += pw[b] * part
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        out = acc_ref[...].astype(jnp.float32)
+        out = out * xs_ref[0] * ws_ref[...][None, :]
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _kernel_a4(x_ref, p_ref, mask_ref, xs_ref, ws_ref, o_ref, acc_ref, *,
+               n_k: int, n_bits: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pw = plane_weights(n_bits)
+    xb = x_ref[...].astype(jnp.int32)  # (bm, bk2) bytes: 2 elements each
+    xe = ((xb & 0xF) ^ 8) - 8  # in-kernel unpack + 4-bit sign extend
+    xo = ((xb >> 4) ^ 8) - 8
+    packed = p_ref[...].astype(jnp.int32)  # (2*bk2, bn) bytes: all planes
+    we = packed[0::2]  # even K rows pair with the low nibbles
+    wo = packed[1::2]
+    for b in range(n_bits):  # bit-serial: two half-K MXU passes per plane
+        @pl.when(mask_ref[b, 0, 0] != 0)  # zero-plane skip (beyond-paper)
+        def _plane(b=b):
+            part = jnp.dot(xe, (we >> b) & 1,
+                           preferred_element_type=jnp.int32)
+            part += jnp.dot(xo, (wo >> b) & 1,
+                            preferred_element_type=jnp.int32)
             acc_ref[...] += pw[b] * part
 
     @pl.when(k == n_k - 1)
@@ -148,4 +187,75 @@ def bitserial_matmul(
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
     )(x_q, packed, mask, x_scale, w_scale)
+    return out[:M, :N]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_bits", "bm", "bn", "bk2", "out_dtype",
+                              "interpret")
+)
+def bitserial_matmul_a4(
+    x_packed: jax.Array,  # [M, ceil(K/2)] uint8 nibble-packed activations
+    planes: jax.Array,  # [K, N] uint8 byte-packed weight planes
+    x_scale: jax.Array,  # scalar f32
+    w_scale: jax.Array,  # [N] f32
+    plane_mask: jax.Array | None = None,  # [n_bits, K/(2*bk2), N/bn] int8
+    *,
+    n_bits: int = 4,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk2: int = DEFAULT_BK // 2,
+    out_dtype=jnp.float32,
+    interpret: bool = True,
+) -> jax.Array:
+    """W4A4 bit-serial GEMM with byte-packed *activations* and weights.
+
+    ``x_packed`` comes from ref.pack_activation_nibbles (2 elements/byte);
+    ``planes`` from ref.pack_bitplanes_bytes.  Each of the ``n_bits`` weight
+    planes costs two MXU passes over half of K (even/odd nibble streams),
+    so FLOPs scale with the plane count while both operand tiles move half
+    the VMEM bytes of the W8A8 byte-packed kernel.
+    """
+    M, K2 = x_packed.shape
+    K, N = planes.shape
+    if K < 2 * K2:  # odd-K weights: pad the dangling row (nibble is zero)
+        planes = jnp.pad(planes, ((0, 2 * K2 - K), (0, 0)))
+    bm, bn, bk2 = min(bm, M), min(bn, N), min(bk2, K2)
+
+    pad_m, pad_n, pad_k2 = (-M) % bm, (-N) % bn, (-K2) % bk2
+    if pad_m or pad_k2:
+        x_packed = jnp.pad(x_packed, ((0, pad_m), (0, pad_k2)))
+    if pad_k2 or pad_n:
+        planes = jnp.pad(planes, ((0, 2 * pad_k2), (0, pad_n)))
+    w_scale = jnp.broadcast_to(jnp.asarray(w_scale, jnp.float32), (N,))
+    if pad_n:
+        w_scale = jnp.pad(w_scale, (0, pad_n))
+    x_scale = jnp.reshape(jnp.asarray(x_scale, jnp.float32), (1,))
+
+    Mp, K2p = x_packed.shape
+    Np = planes.shape[1]
+    n_k = K2p // bk2
+    grid = (Mp // bm, Np // bn, n_k)
+    if plane_mask is not None:
+        assert plane_mask.shape == (n_bits, n_k, Np // bn), plane_mask.shape
+        mask = plane_mask
+    else:
+        mask = plane_block_mask(unpack_bitplanes_bytes(planes, n_bits),
+                                2 * bk2, bn)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel_a4, n_k=n_k, n_bits=n_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk2), lambda m, n, k: (m, k)),
+            pl.BlockSpec((2 * bk2, bn), lambda m, n, k: (k, n)),
+            pl.BlockSpec((n_bits, 1, 1), lambda m, n, k: (0, k, n)),
+            pl.BlockSpec((1,), lambda m, n, k: (0,)),
+            pl.BlockSpec((bn,), lambda m, n, k: (n,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_packed, planes, mask, x_scale, w_scale)
     return out[:M, :N]

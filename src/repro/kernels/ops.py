@@ -14,13 +14,16 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.bitserial_matmul import bitserial_matmul as _bitserial_pallas
+from repro.kernels.bitserial_matmul import bitserial_matmul_a4 as _bitserial_a4_pallas
 from repro.kernels.quant_matmul import quant_matmul as _quant_pallas
 
 __all__ = [
     "on_tpu",
     "quant_matmul",
     "bitserial_matmul",
+    "bitserial_matmul_a4",
     "pack_weights",
+    "pack_activations",
     "quant_matmul_xla",
     "flash_attention",
 ]
@@ -62,6 +65,26 @@ def flash_attention(q, k, v, *, causal: bool = True,
     if prefer_pallas or on_tpu():
         return _fa(q, k, v, causal=causal, interpret=not on_tpu())
     return ref.flash_attention_ref(q, k, v, causal=causal)
+
+
+def pack_activations(x_q: jax.Array) -> jax.Array:
+    """Nibble-pack 4-bit activations (2 elements/byte) for the W4A4 kernel
+    — the activation-side counterpart of :func:`pack_weights`."""
+    return ref.pack_activation_nibbles(x_q)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "prefer_pallas"))
+def bitserial_matmul_a4(x_packed, planes, x_scale, w_scale, *, k: int,
+                        prefer_pallas: bool = False):
+    """W4A4 GEMM: nibble-packed activations x byte-packed 4-bit weight
+    planes; 2 MXU passes per plane (half-K each), half the operand bytes.
+    ``k`` is the unpacked inner dimension."""
+    if prefer_pallas or on_tpu():
+        return _bitserial_a4_pallas(x_packed, planes, x_scale, w_scale,
+                                    n_bits=4, interpret=not on_tpu())
+    x_q = ref.unpack_activation_nibbles(x_packed, k)
+    return ref.bitserial_matmul_ref(
+        x_q, ref.unpack_bitplanes_bytes(planes, 4), x_scale, w_scale)
 
 
 @functools.partial(jax.jit, static_argnames=("n_bits", "prefer_pallas"))

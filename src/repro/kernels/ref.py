@@ -14,6 +14,8 @@ __all__ = [
     "pack_bitplanes",
     "pack_bitplanes_bytes",
     "unpack_bitplanes_bytes",
+    "pack_activation_nibbles",
+    "unpack_activation_nibbles",
     "bitserial_matmul_ref",
     "flash_attention_ref",
 ]
@@ -66,6 +68,32 @@ def unpack_bitplanes_bytes(packed: jax.Array, n_bits: int = 8) -> jax.Array:
     """[K, N] uint8 byte-packed -> [n_bits, K, N] {0,1} int8 planes
     (inverse of :func:`pack_bitplanes_bytes`; oracle/XLA-path format)."""
     return pack_bitplanes(packed.astype(jnp.int32), n_bits)
+
+
+def pack_activation_nibbles(x_q: jax.Array) -> jax.Array:
+    """int8 4-bit activations [M, K] -> [M, ceil(K/2)] uint8: two elements
+    per byte, even element in the low nibble (two's complement over 4 bits).
+
+    Byte-packing extended to the *activation* operand (W4A4): the kernel
+    streams half the activation bytes and recovers each element in-kernel
+    with a shift/mask + sign-extend, paying two half-K MXU passes per
+    weight plane — same MACs, half the VMEM traffic on both operands.
+    """
+    if x_q.shape[-1] % 2:
+        x_q = jnp.pad(x_q, ((0, 0), (0, 1)))
+    lo = x_q[:, 0::2].astype(jnp.int32) & 0xF
+    hi = x_q[:, 1::2].astype(jnp.int32) & 0xF
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_activation_nibbles(packed: jax.Array, K: int) -> jax.Array:
+    """Inverse of :func:`pack_activation_nibbles` (oracle path): [M, K2]
+    uint8 -> [M, K] int8 with 4-bit sign extension."""
+    b = packed.astype(jnp.int32)
+    even = ((b & 0xF) ^ 8) - 8
+    odd = ((b >> 4) ^ 8) - 8
+    full = jnp.stack([even, odd], axis=-1).reshape(b.shape[0], -1)
+    return full[:, :K].astype(jnp.int8)
 
 
 def plane_weights(n_bits: int) -> jax.Array:

@@ -1,11 +1,22 @@
 """Inception v3 — the paper's evaluation workload (Table I).
 
-One structure definition drives BOTH:
+One structure definition drives ALL OF:
   * ``inception_v3_specs()`` — the per-branch LayerSpec list consumed by the
     Neural Cache mapper/simulator (reproduces Table I's Conv / Filter-MB
-    columns exactly; see tests/test_inception.py), and
+    columns exactly; see tests/test_inception.py),
   * ``init_params`` / ``apply`` — a runnable JAX forward pass (float and
-    dynamically-quantized uint8, the paper's §IV-D pipeline).
+    dynamically-quantized uint8, the paper's §IV-D pipeline), and
+  * ``nc_forward`` — the same network executed *through the bit-serial
+    emulation* (core/nc_layers.py): every conv/pool/fc runs on the packed
+    word engine and the per-layer report pairs the emulation's arithmetic
+    cycles with the analytic model's pass cycles (core/simulator.py),
+    paper-style.
+
+An :class:`InceptionConfig` scales the workload: ``FULL`` is the paper's
+299x299 network; ``reduced_config()`` shrinks image size / channel widths /
+class count (and optionally drops mixed stages) so the full forward pass is
+emulation-tractable while still exercising every block type (3x3 stems,
+1x1 packing, 5x5 splits, 7x1/1x7 factorizations, nested splits, pools).
 
 BN is inference-folded into a per-channel scale/bias on every conv.
 """
@@ -19,8 +30,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cache_geometry import CacheGeometry, XEON_E5_35MB
 from repro.core.mapper import LayerSpec
+from repro.core import nc_layers as nc
 from repro.core import quantize as q
+from repro.core import simulator as sim
 
 # ---------------------------------------------------------------------------
 # Structure: op = ("conv", R, S, M, stride, pad) | ("maxpool"|"avgpool", R, stride, pad)
@@ -124,6 +138,81 @@ MIXED = [
 IMG = 299
 
 
+# ---------------------------------------------------------------------------
+# Workload configuration: the full paper network, or a reduced-but-complete
+# miniature for emulation-scale end-to-end runs.
+# ---------------------------------------------------------------------------
+def _scale_op(op, div: int):
+    if op[0] == "conv":
+        _, r, s, m, stride, pad = op
+        return ("conv", r, s, max(1, m // div), stride, pad)
+    if op[0] == "split":
+        return ("split",) + tuple(
+            [_scale_op(o, div) for o in sub] for sub in op[1:])
+    return op
+
+
+def _scale_blocks(blocks, div: int):
+    if div == 1:
+        return blocks
+    out = []
+    for name, entry in blocks:
+        if isinstance(entry, tuple):  # single op (stem)
+            out.append((name, _scale_op(entry, div)))
+        else:  # list of branches
+            out.append((name, [[_scale_op(o, div) for o in br]
+                               for br in entry]))
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class InceptionConfig:
+    """Workload geometry: image size, channel-width divisor, classes, and
+    the stem/mixed structure (pre-scaled by :func:`_scale_blocks`)."""
+
+    img: int = IMG
+    classes: int = 1001
+    stem: tuple = tuple((n, op) for n, op in STEM)
+    mixed: tuple = tuple((n, br) for n, br in MIXED)
+
+    @property
+    def name(self) -> str:
+        return f"inception_v3_{self.img}px_{self.classes}cls"
+
+
+FULL = InceptionConfig()
+
+_STAGE_BLOCKS = {
+    "a": ("Mixed_5b",),
+    "ra": ("Mixed_6a",),
+    "b": ("Mixed_6b",),
+    "rb": ("Mixed_7a",),
+    "c": ("Mixed_7b",),
+}
+
+
+def reduced_config(img: int = 79, width_div: int = 4, classes: int = 32,
+                   stages: Sequence[str] = ("a", "ra", "b", "rb", "c"),
+                   ) -> InceptionConfig:
+    """A miniature Inception v3: same topology, ``width_div``-narrower
+    channels, one mixed block per requested stage.
+
+    The default (79px, /4 widths) keeps every block type and both spatial
+    reductions (7x7 -> 3x3 -> 1x1 mixed grids) while staying tractable for
+    the bit-serial emulation; ``stages=("a",)`` with a smaller image is the
+    test-sized variant.  Note Mixed_6a/7a need a >=7px mixed grid."""
+    keep = [b for s in stages for b in _STAGE_BLOCKS[s]]
+    mixed = tuple((n, br) for n, br in MIXED if n in keep)
+    return InceptionConfig(
+        img=img, classes=classes,
+        stem=tuple(_scale_blocks(STEM, width_div)),
+        mixed=tuple(_scale_blocks(mixed, width_div)),
+    )
+
+
+REDUCED = reduced_config()
+
+
 def _out_size(h: int, r: int, stride: int, pad: str) -> int:
     if pad == "SAME":
         return math.ceil(h / stride)
@@ -164,12 +253,12 @@ def _op_specs(name, block, op, h, c, specs):
     raise ValueError(op)
 
 
-def inception_v3_specs() -> list[LayerSpec]:
+def inception_v3_specs(config: InceptionConfig = FULL) -> list[LayerSpec]:
     specs: list[LayerSpec] = []
-    h, c = IMG, 3
-    for name, op in STEM:
+    h, c = config.img, 3
+    for name, op in config.stem:
         h, c = _op_specs(name, name, op, h, c, specs)
-    for bname, branches in MIXED:
+    for bname, branches in config.mixed:
         out_c = 0
         out_h = h
         for bi, branch in enumerate(branches):
@@ -182,8 +271,9 @@ def inception_v3_specs() -> list[LayerSpec]:
     # global average pool (8x8 window) + FC-as-1x1-conv (§IV-D)
     specs.append(LayerSpec("AvgPool", "avgpool", H=h, R=h, S=h, C=0, M=c, E=1,
                            stride=1, block="AvgPool"))
-    specs.append(LayerSpec("FullyConnected", "fc", H=1, R=1, S=1, C=c, M=1001,
-                           E=1, stride=1, block="FullyConnected"))
+    specs.append(LayerSpec("FullyConnected", "fc", H=1, R=1, S=1, C=c,
+                           M=config.classes, E=1, stride=1,
+                           block="FullyConnected"))
     return specs
 
 
@@ -196,17 +286,18 @@ def _conv_init(key, r, s, c, m, dtype=jnp.float32):
     return {"w": w, "scale": jnp.ones((m,), dtype), "bias": jnp.zeros((m,), dtype)}
 
 
-def _iter_convs(img: int = IMG):
+def _iter_convs(config: InceptionConfig = FULL):
     """Yield (path, r, s, c, m) for every conv in definition order."""
-    specs = inception_v3_specs()
+    specs = inception_v3_specs(config)
     for sp in specs:
         if sp.kind in ("conv", "fc"):
             yield sp.name, sp.R, sp.S, sp.C, sp.M
 
 
-def init_params(key: jax.Array, dtype=jnp.float32) -> dict:
+def init_params(key: jax.Array, dtype=jnp.float32,
+                config: InceptionConfig = FULL) -> dict:
     params = {}
-    convs = list(_iter_convs())
+    convs = list(_iter_convs(config))
     keys = jax.random.split(key, len(convs))
     for k, (name, r, s, c, m) in zip(keys, convs):
         params[name] = _conv_init(k, r, s, c, m, dtype)
@@ -259,11 +350,12 @@ def _apply_op(x, name, op, params, quant: bool):
     raise ValueError(op)
 
 
-def apply(params: dict, x: jax.Array, quant: bool = False) -> jax.Array:
-    """Forward pass.  x: [N, H, W, 3] float32 in [0,1].  Returns [N, 1001]."""
-    for name, op in STEM:
+def apply(params: dict, x: jax.Array, quant: bool = False,
+          config: InceptionConfig = FULL) -> jax.Array:
+    """Forward pass.  x: [N, H, W, 3] float32 in [0,1].  Returns [N, classes]."""
+    for name, op in config.stem:
         x = _apply_op(x, name, op, params, quant)
-    for bname, branches in MIXED:
+    for bname, branches in config.mixed:
         outs = []
         for bi, branch in enumerate(branches):
             y = x
@@ -277,3 +369,187 @@ def apply(params: dict, x: jax.Array, quant: bool = False) -> jax.Array:
     p = params["FullyConnected"]
     logits = x @ p["w"][0, 0] * p["scale"] + p["bias"]
     return logits
+
+
+# ---------------------------------------------------------------------------
+# End-to-end quantized forward pass THROUGH THE EMULATION (§IV-D pipeline):
+# every conv/pool/fc runs on the packed bit-serial engine; the CPU-side glue
+# (per-layer min/max -> scale/zero-point, the "two scalars" of §IV-D) stays
+# in float, exactly as the paper offloads it.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class NCLayerReport:
+    """One emulated layer: arithmetic cycles charged by the engine next to
+    the analytic model's serialized-pass cycles (paper-style)."""
+
+    name: str
+    kind: str
+    out_shape: tuple
+    emulated_cycles: int  # §III formulas per lane group (core/nc_layers.py)
+    modeled_cycles: float  # calibrated per-pass model (core/simulator.py)
+    serial_passes: int
+    modeled_s: float  # modeled wall time incl. data movement
+    lanes: int = 0
+    zero_operand_lanes: int = 0  # EIE-style tag-skippable lanes (note only)
+
+
+@dataclasses.dataclass(frozen=True)
+class NCForwardReport:
+    config_name: str
+    layers: tuple[NCLayerReport, ...]
+
+    @property
+    def total_emulated_cycles(self) -> int:
+        return sum(l.emulated_cycles for l in self.layers)
+
+    @property
+    def total_modeled_cycles(self) -> float:
+        return sum(l.modeled_cycles for l in self.layers)
+
+    @property
+    def total_modeled_s(self) -> float:
+        return sum(l.modeled_s for l in self.layers)
+
+    @property
+    def total_zero_operand_lanes(self) -> int:
+        return sum(l.zero_operand_lanes for l in self.layers)
+
+    def summary(self) -> str:
+        """Paper-style per-layer cycle table (Figure 13 analogue)."""
+        lines = [f"# {self.config_name}: per-layer cycles "
+                 f"(emulated arithmetic | modeled passes)"]
+        lines.append(f"{'layer':32s} {'kind':8s} {'emulated':>14s} "
+                     f"{'modeled':>14s} {'passes':>7s} {'zero-lanes':>11s}")
+        for l in self.layers:
+            lines.append(
+                f"{l.name:32s} {l.kind:8s} {l.emulated_cycles:14d} "
+                f"{l.modeled_cycles:14.0f} {l.serial_passes:7d} "
+                f"{l.zero_operand_lanes:11d}")
+        lines.append(
+            f"{'TOTAL':32s} {'':8s} {self.total_emulated_cycles:14d} "
+            f"{self.total_modeled_cycles:14.0f} {'':7s} "
+            f"{self.total_zero_operand_lanes:11d}")
+        lines.append(f"# modeled latency {self.total_modeled_s * 1e3:.3f} ms")
+        return "\n".join(lines)
+
+
+def _nc_quantize_dynamic(x: np.ndarray) -> q.QuantParams:
+    return q.choose_qparams(jnp.float32(float(x.min())),
+                            jnp.float32(float(x.max())))
+
+
+def _nc_run_conv(name, x, op, params, spec, geom, const, engine, records):
+    _, r, s, m, stride, pad = op
+    p = params[name]
+    # BN scale folds into the filter; bias is added by the requant epilogue
+    wf = np.asarray(p["w"], np.float32) * np.asarray(p["scale"], np.float32)
+    bias = np.asarray(p["bias"], np.float32)
+    x_qp = _nc_quantize_dynamic(x)
+    w_qp = _nc_quantize_dynamic(wf)
+    acc, cycles, stats = nc.nc_conv2d(
+        x, wf, x_qp, w_qp, stride, padding=pad, geom=geom,
+        layer_spec=spec, engine=engine, return_stats=True)
+    out = (np.asarray(acc, np.float32)
+           * np.float32(x_qp.scale) * np.float32(w_qp.scale) + bias)
+    out = np.maximum(out, 0.0)  # in-cache MSB-masked ReLU
+    modeled = sim.modeled_layer_cycles(spec, geom, const)
+    records.append(NCLayerReport(
+        name=name, kind="conv", out_shape=tuple(out.shape),
+        emulated_cycles=int(cycles), modeled_cycles=modeled["total_cycles"],
+        serial_passes=modeled["serial_passes"], modeled_s=modeled["total_s"],
+        lanes=stats.lanes, zero_operand_lanes=stats.zero_operand_lanes))
+    return out
+
+
+def _nc_run_pool(name, x, op, spec, geom, const, records):
+    kind, r, stride, pad = op
+    x_qp = _nc_quantize_dynamic(x)
+    from repro.core.nc_layers import _quantize_np  # host quantize mirror
+    xq = _quantize_np(x, x_qp).astype(np.uint8)
+    if kind == "maxpool":
+        out_q, cycles = nc.nc_maxpool2d(jnp.asarray(xq), r, stride,
+                                        padding=pad)
+    else:
+        out_q, cycles = nc.nc_avgpool2d(jnp.asarray(xq), r, stride,
+                                        padding=pad)
+    out = (np.asarray(out_q, np.float32) - int(x_qp.zero_point)) \
+        * np.float32(x_qp.scale)
+    modeled = sim.modeled_layer_cycles(spec, geom, const)
+    records.append(NCLayerReport(
+        name=name, kind=kind, out_shape=tuple(out.shape),
+        emulated_cycles=int(cycles), modeled_cycles=modeled["total_cycles"],
+        serial_passes=modeled["serial_passes"], modeled_s=modeled["total_s"]))
+    return out
+
+
+def _nc_apply_op(x, name, op, params, specs, geom, const, engine, records):
+    if op[0] == "conv":
+        return _nc_run_conv(name, x, op, params, specs[name], geom, const,
+                            engine, records)
+    if op[0] in ("maxpool", "avgpool"):
+        return _nc_run_pool(name, x, op, specs[name], geom, const, records)
+    if op[0] == "split":
+        outs = []
+        for i, sub in enumerate(op[1:]):
+            y = x
+            for j, sop in enumerate(sub):
+                y = _nc_apply_op(y, f"{name}_s{i}_{j}", sop, params, specs,
+                                 geom, const, engine, records)
+            outs.append(y)
+        return np.concatenate(outs, axis=-1)
+    raise ValueError(op)
+
+
+def nc_forward(params: dict, x: jax.Array,
+               config: InceptionConfig = REDUCED,
+               geom: CacheGeometry = XEON_E5_35MB,
+               const: sim.SimConstants = sim.SimConstants(),
+               engine: str = "host"):
+    """Quantized Inception forward pass through the bit-serial emulation.
+
+    x: [H, W, 3] float32 (single image).  Every conv, pool and the FC run
+    on the packed word engine (tiled, packed-resident); per-layer dynamic
+    quantization mirrors §IV-D (min/max to the CPU, fixed-point requant
+    back).  Returns ``(logits [classes], NCForwardReport)`` — the report
+    pairs each layer's emulated arithmetic cycles with the analytic
+    model's serialized-pass cycles and modeled wall time.
+    """
+    specs = {s.name: s for s in inception_v3_specs(config)}
+    records: list[NCLayerReport] = []
+    act = np.asarray(x, np.float32)
+    assert act.ndim == 3, "nc_forward emulates a single [H, W, 3] image"
+    for name, op in config.stem:
+        act = _nc_apply_op(act, name, op, params, specs, geom, const, engine,
+                           records)
+    for bname, branches in config.mixed:
+        outs = []
+        for bi, branch in enumerate(branches):
+            y = act
+            for oi, op in enumerate(branch):
+                y = _nc_apply_op(y, f"{bname}_b{bi}_{oi}", op, params, specs,
+                                 geom, const, engine, records)
+            outs.append(y)
+        act = np.concatenate(outs, axis=-1)
+    # global average pool through the array, then FC as a 1x1 conv
+    h = act.shape[0]
+    act = _nc_run_pool("AvgPool", act, ("avgpool", h, 1, "VALID"),
+                       specs["AvgPool"], geom, const, records)
+    act = act.reshape(-1)
+    p = params["FullyConnected"]
+    wf = (np.asarray(p["w"], np.float32)[0, 0]
+          * np.asarray(p["scale"], np.float32))
+    x_qp = _nc_quantize_dynamic(act)
+    w_qp = _nc_quantize_dynamic(wf)
+    spec = specs["FullyConnected"]
+    acc, cycles, stats = nc.nc_fc(act, wf, x_qp, w_qp, geom=geom,
+                                  layer_spec=spec, engine=engine,
+                                  return_stats=True)
+    logits = (np.asarray(acc, np.float32) * np.float32(x_qp.scale)
+              * np.float32(w_qp.scale) + np.asarray(p["bias"], np.float32))
+    modeled = sim.modeled_layer_cycles(spec, geom, const)
+    records.append(NCLayerReport(
+        name="FullyConnected", kind="fc", out_shape=tuple(logits.shape),
+        emulated_cycles=int(cycles), modeled_cycles=modeled["total_cycles"],
+        serial_passes=modeled["serial_passes"], modeled_s=modeled["total_s"],
+        lanes=stats.lanes, zero_operand_lanes=stats.zero_operand_lanes))
+    return jnp.asarray(logits), NCForwardReport(config.name, tuple(records))

@@ -279,3 +279,130 @@ def test_selective_copy_packed_mask():
     want = np.where(mask[None, :].astype(bool), np.asarray(src), np.asarray(dst))
     np.testing.assert_array_equal(np.asarray(out), want)
     assert cyc == 9
+
+
+# ---------------------------------------------------------------------------
+# Packed-resident format: direct value packing, the in-packed lane shuffle,
+# row-aligned ops, and the fused dot engine (PR 2)
+# ---------------------------------------------------------------------------
+@given(n_bits=st.integers(1, 16), k=st.sampled_from([1, 5, 9, 32, 72, 100]),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_pack_values_roundtrip(n_bits, k, seed):
+    """pack_values/unpack_values round-trip both layouts without ever
+    materializing raw planes."""
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, n_bits, (7, k))
+    for row_align in (False, True):
+        pp = bs.pack_values(x, n_bits, row_align=row_align)
+        assert (pp.row_lanes > 0) == row_align
+        np.testing.assert_array_equal(np.asarray(bs.unpack_values(pp)), x)
+        # matches the plane-tensor path bit for bit
+        np.testing.assert_array_equal(
+            np.asarray(bs.unpack_lanes(pp)), bs.bitplane_pack(x, n_bits))
+
+
+@given(k=st.sampled_from([1, 4, 9, 31, 32, 72]), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_lane_shuffle_roundtrip(k, seed):
+    """shuffle_to_rows/shuffle_to_flat convert layouts in packed space."""
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, 8, (6, k))
+    flat = bs.pack_values(x, 8)
+    rows = bs.shuffle_to_rows(flat)
+    assert rows.row_lanes == bs._row_layout(k)[0]
+    np.testing.assert_array_equal(rows.words,
+                                  bs.pack_values(x, 8, row_align=True).words)
+    back = bs.shuffle_to_flat(rows)
+    assert back.row_lanes == 0
+    np.testing.assert_array_equal(back.words, flat.words)
+
+
+def test_row_aligned_ops_match_flat():
+    """Element-wise ops agree bit-for-bit across layouts, and mixed-layout
+    operands are aligned via the packed-space shuffle."""
+    rng = np.random.default_rng(21)
+    a = _rand(rng, 8, (5, 9))
+    b = _rand(rng, 8, (5, 9))
+    fa, fb = bs.pack_values(a, 8), bs.pack_values(b, 8)
+    ra, rb = (bs.pack_values(v, 8, row_align=True) for v in (a, b))
+    for op in (bs.bitserial_add, bs.bitserial_sub, bs.bitserial_multiply,
+               bs.bitserial_max):
+        flat_out, c1 = op(fa, fb)
+        rows_out, c2 = op(ra, rb)
+        mixed_out, c3 = op(ra, fb)  # flat operand shuffled to rows
+        assert c1 == c2 == c3
+        np.testing.assert_array_equal(np.asarray(bs.unpack_lanes(rows_out)),
+                                      np.asarray(bs.unpack_lanes(flat_out)))
+        np.testing.assert_array_equal(np.asarray(bs.unpack_lanes(mixed_out)),
+                                      np.asarray(bs.unpack_lanes(flat_out)))
+
+
+def test_reduce_stays_packed():
+    """A packed MAC -> reduce chain never leaves word space and returns a
+    flat-packed result with the unchanged cycle formula."""
+    rng = np.random.default_rng(22)
+    a = _rand(rng, 8, (5, 72))
+    b = _rand(rng, 8, (5, 72))
+    ra, rb = (bs.pack_values(v, 8, row_align=True) for v in (a, b))
+    prod, c_mul = bs.bitserial_multiply(ra, rb)
+    assert isinstance(prod, bs.PackedPlanes) and prod.row_lanes == 128
+    red, c_red = bs.bitserial_reduce(prod)
+    assert isinstance(red, bs.PackedPlanes) and red.row_lanes == 0
+    assert red.lane_shape == (5, 1)
+    want = (a.astype(np.uint64) * b).sum(axis=1)
+    np.testing.assert_array_equal(
+        np.asarray(bs.unpack_values(red))[:, 0], want)
+    assert c_red == bs.reduce_cycles(72, 16)
+
+
+@given(k=st.sampled_from([3, 9, 32, 72]), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_packed_dot_words_exact(k, seed):
+    from repro.core.nc_layers import nc_dot
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, 8, (6, k))
+    w = _rand(rng, 8, (6, k))
+    got, cyc = nc_dot(x, w, acc_bits=32)
+    want = (x.astype(np.int64) * w).sum(axis=-1)
+    np.testing.assert_array_equal(np.asarray(got), want)
+    assert cyc == bs.dot_cycles(k, 8, 32)
+
+
+def test_engine_cache_buckets():
+    """The bucketed jit engine compiles once per (planes, acc, K) key."""
+    rng = np.random.default_rng(23)
+    bs.engine_cache_clear()
+    k = 40
+    for rows in (8, 8, 8):  # same bucket -> one compile
+        x = _rand(rng, 8, (rows, k))
+        w = _rand(rng, 8, (rows, k))
+        xw = bs.pack_values(x, 8, row_align=True).words.reshape(8, -1, 2)
+        ww = bs.pack_values(w, 8, row_align=True).words.reshape(8, -1, 2)
+        vals, _ = bs.packed_dot_words(xw, ww, K=k, acc_bits=32, engine="jit")
+        np.testing.assert_array_equal(
+            np.asarray(vals), (x.astype(np.int64) * w).sum(axis=-1))
+    info = bs.engine_cache_info()
+    assert info["entries"] == 1
+    if info["compiled"]:  # executable count is best-effort (private JAX API)
+        assert info["compiled"] == 1
+
+
+def test_zero_skip_stats_account_and_preserve_results():
+    """Host multiply elides all-zero-operand words; results and cycles are
+    untouched, the elision is visible in SKIP_STATS."""
+    rng = np.random.default_rng(24)
+    a = _rand(rng, 8, (200,))
+    b = np.zeros((200,), np.uint32)
+    b[:3] = rng.integers(1, 256, 3)
+    pa = bs.pack_values(a, 8)
+    pb = bs.pack_values(b, 8)
+    bs.SKIP_STATS.reset()
+    out, cyc = bs.bitserial_multiply(pa, pb)
+    np.testing.assert_array_equal(
+        np.asarray(bs.unpack_values(out)), a.astype(np.int64) * b)
+    assert cyc == bs.mul_cycles(8)  # modeled cycles unchanged by skipping
+    snap = bs.SKIP_STATS.snapshot()
+    assert snap["words_total"] == 7  # 200 lanes -> 7 words
+    assert snap["words_skipped"] == 6  # only the first word has live pairs
+    assert snap["lanes_zero"] >= 197

@@ -178,3 +178,85 @@ def test_byte_packed_sub8_sign_exact(n_bits):
                            interpret=True)
     want = jnp.dot(jnp.asarray(x, jnp.int32), jnp.asarray(w, jnp.int32))
     np.testing.assert_array_equal(np.asarray(got, np.int64), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# W4A4: byte-packed *activations* (2 elements/byte, 2 MXU passes per plane)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("m,k,n", [(8, 32, 16), (100, 130, 60), (16, 13, 8)])
+def test_a4_packed_activations_exact(m, k, n):
+    """Nibble-packed activations must be bit-exact with the int GEMM,
+    including odd K (dangling nibble padded with zero)."""
+    rng = np.random.default_rng(m + k + n)
+    x = rng.integers(-8, 8, size=(m, k)).astype(np.int8)
+    w = rng.integers(-8, 8, size=(k, n)).astype(np.int8)
+    xp = ref.pack_activation_nibbles(jnp.asarray(x))
+    assert xp.shape == (m, (k + 1) // 2) and xp.dtype == jnp.uint8
+    np.testing.assert_array_equal(
+        np.asarray(ref.unpack_activation_nibbles(xp, k)), x)
+    from repro.kernels.bitserial_matmul import bitserial_matmul_a4
+    got = bitserial_matmul_a4(xp, ref.pack_bitplanes_bytes(jnp.asarray(w), 4),
+                              jnp.float32(1.0), jnp.ones(n, jnp.float32),
+                              interpret=True)
+    want = x.astype(np.int64) @ w.astype(np.int64)
+    np.testing.assert_array_equal(np.asarray(got, np.int64), want)
+
+
+def test_a4_matches_w8a8_dequant():
+    """Same dequant epilogue semantics as the W8A8 kernel."""
+    rng = np.random.default_rng(77)
+    x = rng.integers(-8, 8, size=(32, 64)).astype(np.int8)
+    w = rng.integers(-8, 8, size=(64, 24)).astype(np.int8)
+    xs = np.float32(0.031)
+    ws = rng.uniform(0.001, 0.1, size=(24,)).astype(np.float32)
+    from repro.kernels.bitserial_matmul import bitserial_matmul_a4
+    got = bitserial_matmul_a4(
+        ref.pack_activation_nibbles(jnp.asarray(x)),
+        ref.pack_bitplanes_bytes(jnp.asarray(w), 4),
+        xs, jnp.asarray(ws), interpret=True)
+    want = ref.quant_matmul_ref(jnp.asarray(x), jnp.asarray(w), xs,
+                                jnp.asarray(ws))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-5)
+
+
+def test_a4_hlo_flops_scale_with_planes():
+    """Packing activations must not break precision-proportional FLOPs:
+    the W4A4 kernel lowers to ~half the MXU work of the 8-plane kernel
+    (2 half-K passes x 4 planes vs 1 full-K pass x 8 planes)."""
+    from repro.distributed.hlo_analysis import xla_cost_analysis
+    from repro.kernels.bitserial_matmul import (bitserial_matmul,
+                                                bitserial_matmul_a4)
+    rng = np.random.default_rng(5)
+    M, K, N = 128, 256, 128
+    x8 = jnp.asarray(rng.integers(-128, 128, size=(M, K)).astype(np.int8))
+    w8 = ref.pack_bitplanes_bytes(
+        jnp.asarray(rng.integers(-128, 128, size=(K, N)).astype(np.int8)), 8)
+    f8 = jax.jit(lambda a, p: bitserial_matmul(a, p, 1.0, jnp.ones(N),
+                                               n_bits=8))
+    fl8 = xla_cost_analysis(f8.lower(x8, w8).compile()).get("flops", 0)
+    x4 = ref.pack_activation_nibbles(
+        jnp.asarray(rng.integers(-8, 8, size=(M, K)).astype(np.int8)))
+    w4 = ref.pack_bitplanes_bytes(
+        jnp.asarray(rng.integers(-8, 8, size=(K, N)).astype(np.int8)), 4)
+    f4 = jax.jit(lambda a, p: bitserial_matmul_a4(a, p, 1.0, jnp.ones(N),
+                                                  n_bits=4))
+    fl4 = xla_cost_analysis(f4.lower(x4, w4).compile()).get("flops", 0)
+    assert fl8 > 0 and fl4 > 0
+    assert 0.35 < fl4 / fl8 < 0.65, (fl4, fl8)
+
+
+def test_a4_ops_wrapper_fallback_matches_kernel():
+    """ops.bitserial_matmul_a4's XLA fallback equals the Pallas kernel."""
+    from repro.kernels import ops as K
+    rng = np.random.default_rng(8)
+    x = rng.integers(-8, 8, size=(16, 40)).astype(np.int8)
+    w = rng.integers(-8, 8, size=(40, 12)).astype(np.int8)
+    xp = K.pack_activations(jnp.asarray(x))
+    wp = K.pack_weights(jnp.asarray(w, jnp.int32), 4)
+    a = K.bitserial_matmul_a4(xp, wp, jnp.float32(1.0),
+                              jnp.ones(12, jnp.float32), k=40)
+    b = K.bitserial_matmul_a4(xp, wp, jnp.float32(1.0),
+                              jnp.ones(12, jnp.float32), k=40,
+                              prefer_pallas=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
