@@ -7,12 +7,19 @@ Perf-regression gate: before refreshing the baseline, every new record is
 diffed against the previous ``BENCH_kernels.json`` — any recorded op that
 got more than ``REGRESSION_THRESHOLD`` x slower is flagged on stderr and
 listed under ``notes.regressions`` in the refreshed file, so a later PR's
-run makes its own slowdowns visible."""
+run makes its own slowdowns visible.
+
+Slow-test gate: tier-1 (`pytest -x -q`) deselects the ``slow``-marked
+end-to-end reduced-Inception and serving tests (pytest.ini); this harness
+runs them (`pytest -m slow`) after the benches so they stay exercised.
+Set ``BENCH_SKIP_SLOW=1`` to skip the gate."""
 from __future__ import annotations
 
 import importlib
 import json
+import os
 import pathlib
+import subprocess
 import sys
 import traceback
 
@@ -21,6 +28,7 @@ MODULES = [
     "benchmarks.fig14_breakdown",
     "benchmarks.fig15_total_latency",
     "benchmarks.fig16_throughput_batch",
+    "benchmarks.sched_breakdown",
     "benchmarks.tab3_energy",
     "benchmarks.tab4_cache_scaling",
     "benchmarks.kernel_bench",
@@ -32,13 +40,25 @@ BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_kernels.jso
 REGRESSION_THRESHOLD = 1.3  # flag ops that got >1.3x slower than baseline
 
 # Measured on the CI container (PR 2: packed-resident tiled layer pipeline
-# vs PR 1's word-packed engine, vs the per-lane uint8 seed emulation);
+# vs PR 1's word-packed engine, vs the per-lane uint8 seed emulation;
+# PR 3: batched slice-scheduler + decoded bucketed-jit engine body);
 # kept as provenance next to the fresh numbers dumped on every run.
 SPEEDUP_NOTES = {
-    "emulation_engine": "packed-resident row-aligned words; tiled conv "
-                        "(pixels x filters, geometry-bounded) reusing packed "
-                        "window planes across filters; EIE-style zero-operand "
-                        "word skipping; bucketed-jit engine cache",
+    "emulation_engine": "packed-resident row-aligned words; schedule-planned "
+                        "tiles ((image,pixel) rows x filters, geometry-"
+                        "bounded) reusing packed window planes across filters "
+                        "and packed filters across the batch; EIE-style "
+                        "zero-operand word skipping; bucketed-jit engine "
+                        "cache with decoded integer-lane kernel body",
+    "batch4_reduced_forward": "nc_forward(batch=4) reduced_config(): "
+                              "~0.4-1.0 s/img (jit default) vs ~1.8-2.0 s "
+                              "at batch=1 (host) — §VI-C amortization",
+    "host_noise": "this shared container shows >1.3x ambient cross-run "
+                  "drift even at min-of-15 (PR 3: untouched ops incl. the "
+                  "pure-XLA kernel/f32_dot flapped 1.3-2.7x between "
+                  "back-to-back runs); treat notes.regressions entries as "
+                  "real only when kernel/f32_dot (the load canary) is NOT "
+                  "also flagged and the ratio reproduces across runs",
     "emulation_suite_seed_s": 14.45,   # pytest tests/test_nc_layers.py @ seed
     "emulation_suite_now_s": 2.5,      # same module, packed engine (PR 1)
     "emulation_speedup_vs_seed": 5.8,  # wall; per-op bodies are >20x
@@ -90,6 +110,19 @@ def _dump_kernel_records() -> None:
           f"{len(regressions)} regressions)", file=sys.stderr)
 
 
+def _run_slow_gate() -> bool:
+    """Exercise the `slow`-marked end-to-end tests tier-1 deselects."""
+    if os.environ.get("BENCH_SKIP_SLOW"):
+        print("# slow-test gate skipped (BENCH_SKIP_SLOW)", file=sys.stderr)
+        return True
+    repo = pathlib.Path(__file__).resolve().parent.parent
+    cmd = [sys.executable, "-m", "pytest", "-q", "-m", "slow",
+           "-o", "addopts=", "tests"]
+    print(f"# slow-test gate: {' '.join(cmd[2:])}", file=sys.stderr)
+    res = subprocess.run(cmd, cwd=repo)
+    return res.returncode in (0, 5)  # 5: no slow tests collected
+
+
 def main() -> None:
     print("name,us_per_call,derived")
     failures = 0
@@ -108,6 +141,9 @@ def main() -> None:
     # RECORDS list would masquerade as a full perf baseline
     if "benchmarks.kernel_bench" in ok:
         _dump_kernel_records()
+    if not _run_slow_gate():
+        print("# slow-test gate FAILED", file=sys.stderr)
+        failures += 1
     if failures:
         sys.exit(1)
 

@@ -1,0 +1,75 @@
+"""Figure-13-style per-layer latency breakdown FROM THE SCHEDULE, plus the
+throughput-vs-batch sweep (Figure 16 shape) validated against the paper's
+headline.
+
+Both tables are priced off one :class:`~repro.core.schedule.NetworkSchedule`
+— the same plan object the packed-engine emulation and the serving engine
+execute — so the breakdown columns (filter/input/output/mac/reduce/quant)
+and the batching curve cannot drift from what actually runs.  The sweep
+raises if the scaling shape breaks (non-monotone, or the plateau leaves the
+paper's 604 inf/s by more than 10%), making this module a perf-model gate,
+not just a printer."""
+from __future__ import annotations
+
+from collections import defaultdict
+
+from benchmarks.common import row
+from repro.core.cache_geometry import XEON_E5_35MB
+from repro.core.schedule import plan_network
+from repro.core.simulator import PAPER, simulate_network, throughput
+from repro.models.inception import inception_v3_specs
+
+BATCHES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+
+def run() -> list[str]:
+    specs = inception_v3_specs()
+    schedule = plan_network(specs, XEON_E5_35MB, batch=64)
+    r = simulate_network(schedule)
+    rows = []
+
+    # per-block latency with the Figure-14 component split, per layer plan
+    per_block = defaultdict(lambda: defaultdict(float))
+    for l in r.layers:
+        b = per_block[l.spec.block]
+        b["filter"] += l.filter_s
+        b["input"] += l.input_s
+        b["output"] += l.output_s
+        b["mac"] += l.mac_s
+        b["reduce"] += l.reduce_s
+        b["quant"] += l.quant_s
+        b["pool"] += l.pool_s
+    for block, parts in per_block.items():
+        total = sum(parts.values())
+        split = " ".join(f"{k}={v / total:.0%}" for k, v in parts.items()
+                         if v / total >= 0.005)
+        rows.append(row(f"sched13/{block}", total * 1e6, split))
+    rows.append(row("sched13/TOTAL", r.latency_s * 1e6,
+                    f"filters loaded once/batch: "
+                    f"{r.filter_bytes_loaded / 1e6:.1f} MB"))
+
+    # throughput-vs-batch sweep off the same schedule's spill decisions
+    tps = [throughput(r, b) for b in BATCHES]
+    for b, tp in zip(BATCHES, tps):
+        rows.append(row(f"sched13/throughput_batch_{b}", 1e6 / tp,
+                        f"{tp:.1f} inf/s (dual socket)"))
+    # shape validation: monotone ramp to a plateau at the paper's headline
+    if not all(b >= a for a, b in zip(tps, tps[1:])):
+        raise RuntimeError(f"throughput-vs-batch not monotone: {tps}")
+    plateau = tps[BATCHES.index(64)]
+    err = abs(plateau - PAPER["nc_throughput"]) / PAPER["nc_throughput"]
+    if err > 0.10:
+        raise RuntimeError(
+            f"batch-64 plateau {plateau:.1f} inf/s deviates {err:.1%} from "
+            f"the paper's {PAPER['nc_throughput']}")
+    if tps[-1] - plateau > 0.05 * plateau:
+        raise RuntimeError("no plateau: batch 256 still gaining >5%")
+    rows.append(row("sched13/throughput_shape", 0.0,
+                    f"monotone, plateau {plateau:.1f} inf/s "
+                    f"({err:.1%} vs paper), spill "
+                    f"{schedule.spill_bytes_per_image / 1e6:.2f} MB/img"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

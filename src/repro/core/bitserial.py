@@ -121,12 +121,14 @@ __all__ = [
     "mul_cycles",
     "div_cycles",
     "reduce_cycles",
+    "minmax_cycles",
     "dot_cycles",
     "bitserial_add",
     "bitserial_sub",
     "bitserial_multiply",
     "bitserial_mac",
     "bitserial_reduce",
+    "bitserial_minmax",
     "selective_copy",
     "bitserial_relu",
     "bitserial_max",
@@ -557,6 +559,18 @@ def reduce_cycles(k: int, width: int) -> int:
     return cyc
 
 
+def minmax_cycles(k: int, width: int) -> int:
+    """Cycles for the §IV-D in-cache min/max log tree over ``k`` lanes of
+    ``width``-bit values.
+
+    Each halving step is one subtract (whose sign drives the tag latch),
+    one tag-masked selective copy, and a tag load — min and max candidate
+    lanes are separate bit-line groups advancing in lockstep, so a single
+    pass serves both trees (like the §IV-D max-pool sequence)."""
+    steps = int(np.ceil(np.log2(max(k, 1))))
+    return steps * (add_cycles(width) + (width + 1) + 1)
+
+
 def dot_cycles(k: int, n_bits: int, acc_bits: int) -> int:
     """Per-lane-group dot cycles: one n-bit MAC into an ``acc_bits`` partial
     sum, then the §III-D log tree over ``k`` lanes (the conv inner loop)."""
@@ -906,6 +920,101 @@ def bitserial_reduce(planes, out_bits: int | None = None):
 
 
 # ---------------------------------------------------------------------------
+# Min/max reduction (§IV-D): the dynamic-range scalars of the requantization
+# step, computed inside the array.  Same row-aligned halving walk as the sum
+# tree, but each step is subtract + tag-masked selective copy instead of a
+# widening add, so the width never grows.
+# ---------------------------------------------------------------------------
+def _minmax_tree_words(words, width: int, K: int):
+    """Run the min/max log tree on row-aligned words ``(width, ..., wpr)``.
+
+    Returns ``(min_words, max_words, cycles)``; after the tree each row's
+    min/max sits at its segment's lane 0.  The host keeps two word grids
+    (min candidates, max candidates), but they model *disjoint bit-line
+    groups advancing in lockstep*: the per-step charge is one subtract +
+    one tag-masked copy + a tag load (see :func:`minmax_cycles`)."""
+    P, wpr, r = _row_layout(K)
+    traced = _is_traced(words)
+    xp = jnp if traced else np
+    seg = P if P < _WORD else _WORD
+
+    def halves(w, half):
+        if half >= _WORD:
+            hw = half // _WORD
+            return w[..., :hw], w[..., hw:]
+        pat = (1 << half) - 1
+        keep = 0
+        for j in range(_WORD // seg):
+            keep |= pat << (j * seg)
+        keep = np.uint32(keep)
+        return w & keep, (w >> xp.uint32(half)) & keep
+
+    mn = mx = words
+    cycles = 0
+    m = P
+    while m > 1:
+        half = m // 2
+        lo, hi = halves(mx, half)
+        lo_lt = _add_words(lo, hi, out_bits=width + 1, invert_b=True,
+                           carry_one=True)[-1]  # sign of lo - hi
+        mx = _select_words(lo, hi, lo_lt)
+        lo, hi = halves(mn, half)
+        hi_lt = _add_words(hi, lo, out_bits=width + 1, invert_b=True,
+                           carry_one=True)[-1]  # sign of hi - lo
+        mn = _select_words(lo, hi, hi_lt)
+        cycles += add_cycles(width) + (width + 1) + 1
+        m = half
+    return mn, mx, cycles
+
+
+def bitserial_minmax(planes):
+    """Per-row min AND max over the *last* lane axis (§IV-D dynamic range).
+
+    The in-cache half of the quantization step: a log tree of subtract +
+    tag-masked selective copies run entirely in packed word space, so only
+    the two per-row scalars ever leave the array.  Accepts raw planes or
+    :class:`PackedPlanes` (row-aligned inputs walk their words directly,
+    flat inputs pay one :func:`shuffle_to_rows`).  Returns
+    ``((min, max), cycles)`` with the lane axis reduced to 1; the
+    step-summed cycles are asserted against :func:`minmax_cycles`.
+
+    Padding caveat: zero-padded lanes (flat packing, or rows whose length
+    is not the power-of-two row width) fold a 0 into the tree.  Callers
+    needing exact minima over arbitrary data must pre-pad rows to the next
+    power of two with copies of a real lane — core/nc_layers.nc_minmax
+    does exactly that (and handles two's-complement sign biasing)."""
+    packed_in = isinstance(planes, PackedPlanes)
+    pp = planes if packed_in else pack_lanes(planes, row_align=True)
+    k = pp.lane_shape[-1] if pp.lane_shape else 1
+    width = pp.n_planes
+    other = tuple(pp.lane_shape[:-1])
+    out_shape = other + (1,)
+    traced = _is_traced(pp.words)
+    if k <= 1:
+        # the K == 1 row layout degenerates to flat packing of the rows
+        out_mn = PackedPlanes(pp.words, out_shape, 0)
+        out_mx = out_mn
+        cycles = 0
+    else:
+        rows = shuffle_to_rows(pp)
+        wpr = max(_row_layout(k)[1], 1)
+        mnw, mxw, cycles = _minmax_tree_words(
+            rows.words.reshape((width, -1, wpr)), width, k)
+        n_rows = int(np.prod(other)) if other else 1
+        dt = jnp.uint8 if traced else np.uint8
+
+        def emit(w):
+            bits = _rows_result_bits(w, k)[:, :n_rows]
+            return pack_lanes(bits.astype(dt).reshape((width,) + out_shape))
+
+        out_mn, out_mx = emit(mnw), emit(mxw)
+    assert cycles == minmax_cycles(k, width), (cycles, minmax_cycles(k, width))
+    if packed_in:
+        return (out_mn, out_mx), cycles
+    return (unpack_lanes(out_mn), unpack_lanes(out_mx)), cycles
+
+
+# ---------------------------------------------------------------------------
 # Fused packed dot (MAC + log-tree) over row-aligned word grids — the layer
 # tiler's engine entry.  Bucketed jit cache for repeated tile shapes.
 # ---------------------------------------------------------------------------
@@ -965,6 +1074,33 @@ def _dot_words_impl(xw, ww, *, K: int, acc_bits: int):
     return vals.reshape(grid[:-1] + (grid[-1] * r,))
 
 
+def _dot_words_decoded(xw, ww, *, K: int, acc_bits: int):
+    """Bucketed-jit engine body: decode the packed row grids to integer
+    lanes and dot them with one fused multiply-sum.
+
+    Bit-exact with the scanned bit-serial walk (:func:`_dot_words_impl`)
+    — padding lanes decode to zero and contribute nothing — but lowers to
+    vectorized integer XLA ops instead of a sequential scan, so one
+    compiled executable per bucket actually amortizes on batch sweeps.
+    The structural bit-serial emulation stays on the host path; modeled
+    cycles are charged by the caller's unchanged formula either way."""
+    P, wpr, r = _row_layout(K)
+
+    def decode(w):
+        n = w.shape[0]
+        bits = _unpack_bits32_jnp(w)  # (n, *grid[, wpr], 32)
+        weights = (jnp.int32(1) << jnp.arange(n, dtype=jnp.int32)).reshape(
+            (n,) + (1,) * (bits.ndim - 1))
+        return (bits.astype(jnp.int32) * weights).sum(axis=0)
+
+    prod = decode(xw) * decode(ww)  # broadcast over the grid axes
+    if r == 1:
+        return prod.sum(axis=(-1, -2))  # (wpr, 32) lanes cover one row
+    pr = prod.reshape(prod.shape[:-1] + (r, P))  # 32 = r rows x P lanes
+    s = pr.sum(axis=-1)
+    return s.reshape(prod.shape[:-2] + (prod.shape[-2] * r,))
+
+
 def packed_dot_words(xw, ww, *, K: int, acc_bits: int, engine: str = "host"):
     """Fused row-aligned dot: ``sum_k x[row, k] * w[row, k]`` per row.
 
@@ -979,14 +1115,16 @@ def packed_dot_words(xw, ww, *, K: int, acc_bits: int, engine: str = "host"):
     unchanged per-dot formula :func:`dot_cycles` — one MAC into an
     ``acc_bits`` partial sum plus the §III-D log tree.
 
-    ``engine="jit"`` dispatches to a bucketed compiled kernel: callers pad
-    their tile's grid axes to :func:`bucket_words` sizes (zero rows decode
-    to zero and slice off — the conv tiler in core/nc_layers.py does this
-    for every tile, ragged tails included) so tiles replay one cached
-    executable per (planes, acc, K) key and grid bucket.  The exact host
-    path is used instead when the traced int32 decode could overflow
-    (operand widths and K such that the maximum row sum reaches 2^31
-    without ``jax_enable_x64``).
+    ``engine="jit"`` dispatches to a bucketed compiled kernel
+    (:func:`_dot_words_decoded` — decoded integer lanes, bit-exact with
+    the bit-serial walk): callers pad their tile's grid axes to
+    :func:`bucket_words` sizes (zero rows decode to zero and slice off —
+    the conv tiler in core/nc_layers.py does this for every tile, ragged
+    tails included) so tiles replay one cached executable per
+    (planes, acc, K) key and grid bucket.  The exact host path is used
+    instead when the int32 decode could overflow (operand widths and K
+    such that the maximum row sum reaches 2^31 without
+    ``jax_enable_x64``).
     """
     n_bits = max(xw.shape[0], ww.shape[0])
     cycles = dot_cycles(K, n_bits, acc_bits)
@@ -998,7 +1136,7 @@ def packed_dot_words(xw, ww, *, K: int, acc_bits: int, engine: str = "host"):
         key = (int(xw.shape[0]), int(ww.shape[0]), acc_bits, K)
         fn = _ENGINE_CACHE.get(key)
         if fn is None:
-            fn = jax.jit(functools.partial(_dot_words_impl, K=K,
+            fn = jax.jit(functools.partial(_dot_words_decoded, K=K,
                                            acc_bits=acc_bits))
             _ENGINE_CACHE[key] = fn
         return np.asarray(fn(jnp.asarray(xw), jnp.asarray(ww))), cycles

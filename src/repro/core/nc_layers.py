@@ -14,28 +14,45 @@ row-aligned word space (``pack_values(..., row_align=True)``), the MAC and
 the §III-D log-tree reduction run on words, and only the final per-row sums
 are decoded — no per-lane plane tensor is ever materialized.
 
-Work is tiled over **output pixels x filters** the way the mapper
-serializes passes (core/mapper.py): a tile's lane count is bounded by the
-cache geometry (``geom.compute_slots`` bit lines), so peak host memory
-follows the modeled hardware instead of E*F*M*K.  Within a tile, the
+Work is tiled over **(image, output pixel) rows x filters** the way the
+slice scheduler plans it (core/schedule.py, fed by the mapper's
+serialized passes): a tile's lane count is bounded by the cache geometry
+(``geom.compute_slots`` bit lines), so peak host memory follows the
+modeled hardware instead of B*E*F*M*K.  Within a tile, the
 packed *window* rows are packed once and broadcast across every filter at
 word granularity (and the packed filter rows across every pixel) — the
 word-level analogue of filter replication across arrays (§IV-B).  The
-tiler consults ``mapper.check_wordline_budget`` and refuses layers whose
-per-bit-line working set cannot fit the modeled array.
+planner consults ``mapper.check_wordline_budget`` and refuses layers
+whose per-bit-line working set cannot fit the modeled array.
+
+Batch dimension (§VI-C): every layer accepts a leading batch axis
+(``[B, H, W, C]``); the batch folds into the packed lane axis, so one
+MAC+reduce serves rows from several images of a batch tile while the
+filters stay packed once per layer per batch — the residency the
+scheduler accounts as ``filter_bytes`` loaded once.  Quantization may be
+per-image: ``x_qp`` accepts a sequence of per-image
+:class:`~repro.core.quantize.QuantParams` (the integer MAC is shared
+across the batch; only the affine zero-point correction and the padding
+constant vary per image), and already-quantized *integer* inputs skip the
+quantize step entirely (the §IV-D resident-uint8 pipeline).
 
 Layer cycle counts are Python ints and are *unchanged* by tiling or
-packing: each (pixel, filter) lane group still reports the same
+packing: each (image, pixel, filter) lane group still reports the same
 ``per_dot_cycles`` (mul + accumulate + log-tree), so total modeled cycles
 are bit-identical to the untiled formulation — the emulation got faster,
 the modeled hardware did not.  ``engine="jit"`` routes tiles through the
 bucketed compiled engine (see core/bitserial.py) for sweep workloads.
+
+:func:`nc_minmax` is the §IV-D in-cache dynamic-range reduction: a
+bit-serial log tree of subtract + tag-masked copies over packed lanes —
+only the two scalars per image ever leave the cache.
 
 The TPU-fast path lives in repro/kernels.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -43,14 +60,16 @@ import numpy as np
 
 from repro.core import bitserial as bs
 from repro.core import quantize as q
+from repro.core import schedule as sched
 from repro.core.cache_geometry import CacheGeometry, XEON_E5_35MB
-from repro.core.mapper import LayerSpec, check_wordline_budget, map_layer
+from repro.core.mapper import LayerSpec
 
 __all__ = [
     "nc_dot",
     "nc_conv2d",
     "nc_maxpool2d",
     "nc_avgpool2d",
+    "nc_minmax",
     "nc_relu_requant",
     "nc_fc",
     "ConvStats",
@@ -61,14 +80,16 @@ __all__ = [
 class ConvStats:
     """Per-layer emulation accounting notes (cycles stay formula-exact)."""
 
-    lanes: int  # E*F*M*K MAC lanes
+    lanes: int  # B*E*F*M*K MAC lanes
     zero_operand_lanes: int  # lanes a tag latch could predicate off (EIE-style)
     tiles: int
-    tile_pixels: int
+    tile_pixels: int  # (image, pixel) rows per tile
     tile_filters: int
-    serial_passes: int  # mapper's modeled pass count for the layer
+    serial_passes: int  # mapper's modeled pass count for the layer (per image)
     engine_words_total: int  # host-engine word columns seen by the multiplier
     engine_words_skipped: int  # word columns elided (all-zero operand)
+    batch: int = 1  # images folded into the lane axis this call
+    filter_loads: int = 1  # times the filter word grid was packed (§VI-C: 1/batch)
 
 
 def nc_dot(x_q, w_q, acc_bits: int = 24, n_bits: int = 8):
@@ -106,6 +127,30 @@ def _quantize_np(x, qp: q.QuantParams) -> np.ndarray:
     return np.clip(vals, qp.qmin, qp.qmax).astype(np.int64)
 
 
+def _as_qp_list(qp, B: int) -> list[q.QuantParams]:
+    """Normalize a QuantParams-or-per-image-sequence to a length-B list."""
+    if isinstance(qp, q.QuantParams):
+        return [qp] * B
+    qps = list(qp)
+    if len(qps) != B:
+        raise ValueError(f"got {len(qps)} per-image QuantParams for batch {B}")
+    if any(p.bits != qps[0].bits for p in qps):
+        raise ValueError("per-image QuantParams must share a bit width")
+    return qps
+
+
+def _quantize_images(x4: np.ndarray, qps: list[q.QuantParams]) -> np.ndarray:
+    """Per-image quantize of ``[B, H, W, C]`` — each image uses its own
+    scale/zero-point, bit-identical to :func:`_quantize_np` per image."""
+    if np.issubdtype(x4.dtype, np.integer):
+        return x4.astype(np.int64)  # resident path: already quantized
+    scales = np.array([np.float32(p.scale) for p in qps], np.float32)
+    zps = np.array([int(p.zero_point) for p in qps], np.int64)
+    vals = (np.round(x4.astype(np.float32) / scales[:, None, None, None])
+            + zps[:, None, None, None])
+    return np.clip(vals, qps[0].qmin, qps[0].qmax).astype(np.int64)
+
+
 def _same_pad(h: int, r: int, stride: int) -> tuple[int, int]:
     """TF/lax SAME convention: total pad so out = ceil(h/stride); extra
     padding goes after (bottom/right)."""
@@ -123,6 +168,18 @@ def _extract_windows(x: np.ndarray, R: int, S: int, stride: int):
     cols = np.arange(F)[:, None] * stride + np.arange(S)[None, :]  # (F, S)
     win = x[rows][:, :, cols]  # (E, R, F, S, C)
     return win.transpose(0, 2, 1, 3, 4).reshape(E, F, R * S * C), E, F
+
+
+def _extract_windows_batch(x4: np.ndarray, R: int, S: int, stride: int):
+    """[B, H, W, C] -> ([B, E, F, R*S*C] window tensor, E, F)."""
+    B, H, W, C = x4.shape
+    E = (H - R) // stride + 1
+    F = (W - S) // stride + 1
+    rows = np.arange(E)[:, None] * stride + np.arange(R)[None, :]  # (E, R)
+    cols = np.arange(F)[:, None] * stride + np.arange(S)[None, :]  # (F, S)
+    win = x4[:, rows][:, :, :, cols]  # (B, E, R, F, S, C)
+    return (win.transpose(0, 1, 3, 2, 4, 5).reshape(B, E, F, R * S * C),
+            E, F)
 
 
 def _pack_x_rows(rows: np.ndarray, n_bits: int) -> np.ndarray:
@@ -156,38 +213,10 @@ def _pack_w_rows(rows: np.ndarray, n_bits: int) -> np.ndarray:
     return out.astype(np.uint32)[:, :, None]
 
 
-def _conv_tiles(E: int, F: int, M: int, K: int,
-                geom: CacheGeometry,
-                tile_pixels: int | None,
-                tile_filters: int | None) -> tuple[int, int]:
-    """Default tile sizes: bound a tile's bit-line count (rows x P padded
-    lanes) by the cache's compute slots, preferring whole-pixel tiles."""
-    P = bs._row_layout(K)[0]
-    cap = max(geom.compute_slots, P)
-    # clamp caller-supplied sizes first so the derived dimension is sized
-    # for the effective tile, not an oversized request
-    if tile_pixels is not None:
-        tile_pixels = min(tile_pixels, E * F)
-    if tile_filters is not None:
-        tile_filters = min(tile_filters, M)
-    if tile_pixels is None and tile_filters is None:
-        if P * E * F * M <= cap:
-            return E * F, M
-        tf = cap // (P * E * F)
-        if tf >= 1:
-            return E * F, int(tf)
-        return max(1, cap // P), 1
-    if tile_filters is None:
-        tile_filters = max(1, min(M, cap // (P * tile_pixels)))
-    if tile_pixels is None:
-        tile_pixels = max(1, min(E * F, cap // (P * tile_filters)))
-    return min(tile_pixels, E * F), min(tile_filters, M)
-
-
 def nc_conv2d(
     x: jax.Array,
     w: jax.Array,
-    x_qp: q.QuantParams,
+    x_qp: q.QuantParams | Sequence[q.QuantParams],
     w_qp: q.QuantParams,
     stride: int = 1,
     *,
@@ -196,81 +225,102 @@ def nc_conv2d(
     tile_filters: int | None = None,
     geom: CacheGeometry = XEON_E5_35MB,
     layer_spec: LayerSpec | None = None,
+    plan: sched.SlicePlan | None = None,
     engine: str = "host",
     return_stats: bool = False,
 ):
     """Quantized conv through the array model (packed-resident + tiled).
 
-    x: [H, W, C] float, w: [R, S, C, M] float.  Both are quantized
-    (zero-point affine, ``qp.bits`` planes), the cross terms of
+    x: [H, W, C] or [B, H, W, C] float, w: [R, S, C, M] float.  Both are
+    quantized (zero-point affine, ``qp.bits`` planes), the cross terms of
     (x-zx)(w-zw) are handled exactly as the integer expansion, and the
     result is returned as int32 — what the reserved-way staging would hold
-    before requantization.  ``padding="SAME"`` pads with the quantized
-    zero point (exact under the affine identity).
+    before requantization.  Integer-dtype inputs are treated as *already
+    quantized* (the resident-uint8 pipeline) and skip the quantize step;
+    ``x_qp`` may be a per-image sequence for batched inputs.
+    ``padding="SAME"`` pads with the (per-image) quantized zero point
+    (exact under the affine identity).
 
-    Every (output pixel, filter) pair is a lane group.  Work is tiled over
-    output pixels and filters so a tile's bit lines fit the cache geometry
-    (peak memory is bounded by ``geom.compute_slots``, not E*F*M*K); the
-    packed window rows of a pixel tile are packed once and broadcast
-    across every filter.  Cycle accounting is unchanged by tiling: each
-    lane group reports the same ``per_dot_cycles`` as the untiled
-    formulation.
+    Every (image, output pixel, filter) triple is a lane group.  Work is
+    tiled over (image, pixel) rows and filters so a tile's bit lines fit
+    the cache geometry (peak memory is bounded by ``geom.compute_slots``,
+    not B*E*F*M*K); the batch folds into the row axis, and the packed
+    window rows of a row tile are packed once and broadcast across every
+    filter, while the filter word grid packs ONCE per layer per batch
+    (§VI-C residency).  Tile sizes come from ``plan`` (a
+    :class:`~repro.core.schedule.SlicePlan`) when given, else from
+    :func:`~repro.core.schedule.plan_layer` — one plan object from the
+    mapper to the packed engine.  Cycle accounting is unchanged by tiling
+    or batching: each lane group reports the same ``per_dot_cycles`` as
+    the untiled single-image formulation.
 
     ``engine="jit"`` runs tiles through the bucketed compiled engine
     (tiles are padded to a uniform shape so one executable serves the
     whole layer); ``return_stats=True`` appends a :class:`ConvStats` with
     the EIE-style zero-operand skip counts.
     """
-    xq = _quantize_np(np.asarray(x), x_qp)
-    wq = _quantize_np(np.asarray(w), w_qp)
+    xin = np.asarray(x)
+    batched = xin.ndim == 4
+    x4 = xin if batched else xin[None]
+    B = x4.shape[0]
+    x_qps = _as_qp_list(x_qp, B)
+    wq = (np.asarray(w, np.int64)
+          if np.issubdtype(np.asarray(w).dtype, np.integer)
+          else _quantize_np(np.asarray(w), w_qp))
+    xq = _quantize_images(x4, x_qps)
     R, S, Cw, M = wq.shape
-    assert xq.shape[2] == Cw
+    assert xq.shape[3] == Cw
+    zxs = np.array([int(p.zero_point) for p in x_qps], np.int64)
     if padding == "SAME":
-        ph = _same_pad(xq.shape[0], R, stride)
-        pw = _same_pad(xq.shape[1], S, stride)
-        xq = np.pad(xq, (ph, pw, (0, 0)),
-                    constant_values=int(x_qp.zero_point))
+        ph = _same_pad(xq.shape[1], R, stride)
+        pw = _same_pad(xq.shape[2], S, stride)
+        padded = np.empty((B, xq.shape[1] + sum(ph), xq.shape[2] + sum(pw),
+                           Cw), np.int64)
+        padded[:] = zxs[:, None, None, None]  # per-image zero point
+        padded[:, ph[0]:ph[0] + xq.shape[1], pw[0]:pw[0] + xq.shape[2]] = xq
+        xq = padded
     elif padding != "VALID":
         raise ValueError(f"padding must be VALID or SAME, got {padding!r}")
-    H = xq.shape[0]
-    win, E, F = _extract_windows(xq, R, S, stride)  # (E, F, K)
+    H = xq.shape[1]
+    win, E, F = _extract_windows_batch(xq, R, S, stride)  # (B, E, F, K)
     K = R * S * Cw
-    n_bits = max(x_qp.bits, w_qp.bits)
+    n_bits = max(x_qps[0].bits, w_qp.bits)
     acc_bits = 32
 
-    # mapper contract: refuse layers whose bit-line working set overflows
-    # the array's word lines (a silent over-allocation in hardware).
+    # scheduler contract: the plan carries the mapper layout (word-line
+    # budget already enforced) and the geometry-bounded tile sizes.
     spec = layer_spec or LayerSpec(
         name="nc_conv2d", kind="conv", H=H, R=R, S=S, C=Cw, M=M, E=E,
         stride=stride)
-    mapped = map_layer(spec, geom)
-    check_wordline_budget(mapped, geom)
+    if plan is None or tile_pixels is not None or tile_filters is not None:
+        plan = sched.plan_layer(spec, geom, batch=B, tile_pixels=tile_pixels,
+                                tile_filters=tile_filters)
+    rows_total = B * E * F
+    tile_rows = max(1, min(plan.tile_rows, rows_total))
+    tile_filters = max(1, min(plan.tile_filters, M))
 
-    tile_pixels, tile_filters = _conv_tiles(E, F, M, K, geom, tile_pixels,
-                                            tile_filters)
-
-    win_flat = win.reshape(E * F, K).astype(np.uint8 if n_bits <= 8
-                                            else np.uint32)
+    win_flat = win.reshape(rows_total, K).astype(np.uint8 if n_bits <= 8
+                                                 else np.uint32)
     w_rows = wq.reshape(K, M).T.astype(np.uint8 if n_bits <= 8 else np.uint32)
-    # filters packed once for the whole layer; tiles slice the word grid
+    # filters packed once per layer per batch; tiles slice the word grid
     ww_all = _pack_w_rows(w_rows, w_qp.bits)
 
     skip0_words = bs.SKIP_STATS.words_total
     skip0_skipped = bs.SKIP_STATS.words_skipped
     per_dot = bs.dot_cycles(K, n_bits, acc_bits)
-    out = np.empty((E * F, M), np.int64)
+    out = np.empty((rows_total, M), np.int64)
     n_tiles = 0
     # jit engine: pad every tile (ragged tails included) to the layer's
     # bucket_words sizes so one compiled executable serves the whole layer
     # (and any other layer landing on the same bucket)
-    bt = bs.bucket_words(tile_pixels) if engine == "jit" else tile_pixels
+    bt = bs.bucket_words(tile_rows) if engine == "jit" else tile_rows
     bf = bs.bucket_words(tile_filters) if engine == "jit" else None
-    for p0 in range(0, E * F, tile_pixels):
-        p1 = min(p0 + tile_pixels, E * F)
+    for p0 in range(0, rows_total, tile_rows):
+        p1 = min(p0 + tile_rows, rows_total)
         rows = win_flat[p0:p1]
         if engine == "jit" and rows.shape[0] < bt:
             rows = np.pad(rows, ((0, bt - rows.shape[0]), (0, 0)))
-        xw = _pack_x_rows(rows, x_qp.bits)
+        xw = _pack_x_rows(rows, x_qps[0].bits)
         for m0 in range(0, M, tile_filters):
             m1 = min(m0 + tile_filters, M)
             ww = ww_all[:, m0:m1]
@@ -282,19 +332,20 @@ def nc_conv2d(
             vals = np.asarray(vals)  # (Mt, T[, expanded rows])
             out[p0:p1, m0:m1] = vals[: m1 - m0, : p1 - p0].T
             n_tiles += 1
-    total_cycles = per_dot * E * F * M  # per-dot cost, one dot per (e,f,m)
+    total_cycles = per_dot * rows_total * M  # one dot per (b,e,f,m)
 
     # affine-zero-point correction (done by the accumulating requant step
-    # in-cache; exact integer identity)
-    sx = win.sum(axis=-1)  # (E, F)
+    # in-cache; exact integer identity — zero points are per image)
+    sx = win.sum(axis=-1)  # (B, E, F)
     sw = wq.sum(axis=(0, 1, 2))  # (M,)
+    zx = zxs[:, None, None, None]
     acc = (
-        out.reshape(E, F, M)
-        - int(w_qp.zero_point) * sx[:, :, None]
-        - int(x_qp.zero_point) * sw[None, None, :]
-        + K * int(x_qp.zero_point) * int(w_qp.zero_point)
+        out.reshape(B, E, F, M)
+        - int(w_qp.zero_point) * sx[..., None]
+        - zx * sw[None, None, None, :]
+        + K * zx * int(w_qp.zero_point)
     )
-    result = jnp.asarray(acc, jnp.int32)
+    result = jnp.asarray(acc if batched else acc[0], jnp.int32)
     if not return_stats:
         return result, total_cycles
     # separable zero-operand count: sum_k (#zero-free windows_k)*(#zero-free w_k)
@@ -302,14 +353,16 @@ def nc_conv2d(
     cw = (w_rows != 0).sum(axis=0).astype(np.int64)  # (K,)
     live = int((cx * cw).sum())
     stats = ConvStats(
-        lanes=E * F * M * K,
-        zero_operand_lanes=E * F * M * K - live,
+        lanes=rows_total * M * K,
+        zero_operand_lanes=rows_total * M * K - live,
         tiles=n_tiles,
-        tile_pixels=tile_pixels,
+        tile_pixels=tile_rows,
         tile_filters=tile_filters,
-        serial_passes=mapped.serial_passes,
+        serial_passes=plan.serial_passes,
         engine_words_total=bs.SKIP_STATS.words_total - skip0_words,
         engine_words_skipped=bs.SKIP_STATS.words_skipped - skip0_skipped,
+        batch=B,
+        filter_loads=1,
     )
     return result, total_cycles, stats
 
@@ -318,56 +371,102 @@ def nc_maxpool2d(x_q: jax.Array, window: int, stride: int,
                  padding: str = "VALID"):
     """uint8 max pooling via subtract + MSB-masked copies (§IV-D).
 
-    All E x F x C output lanes advance in lockstep through the window^2 - 1
-    sequential max steps (cycle count stays per-pixel, as the per-pixel
-    formulation reported it)."""
-    xq = np.asarray(x_q, np.int64)
+    Accepts ``[H, W, C]`` or ``[B, H, W, C]``; all B x E x F x C output
+    lanes advance in lockstep through the window^2 - 1 sequential max
+    steps (cycle count stays per-pixel, as the per-pixel formulation
+    reported it)."""
+    xin = np.asarray(x_q, np.int64)
+    batched = xin.ndim == 4
+    xq = xin if batched else xin[None]
     if padding == "SAME":
-        ph = _same_pad(xq.shape[0], window, stride)
-        pw = _same_pad(xq.shape[1], window, stride)
-        xq = np.pad(xq, (ph, pw, (0, 0)))  # uint8 min
-    win, E, F = _extract_windows(xq, window, window, stride)
-    C = x_q.shape[2]
-    win = win.reshape(E, F, window * window, C)
-    cur = bs.pack_values(win[:, :, 0].astype(np.uint32), 8)
+        ph = _same_pad(xq.shape[1], window, stride)
+        pw = _same_pad(xq.shape[2], window, stride)
+        xq = np.pad(xq, ((0, 0), ph, pw, (0, 0)))  # uint8 min
+    win, E, F = _extract_windows_batch(xq, window, window, stride)
+    B, C = xq.shape[0], xq.shape[3]
+    win = win.reshape(B, E, F, window * window, C)
+    cur = bs.pack_values(win[:, :, :, 0].astype(np.uint32), 8)
     cycles = 0
     for t in range(1, window * window):
-        nxt = bs.pack_values(win[:, :, t].astype(np.uint32), 8)
+        nxt = bs.pack_values(win[:, :, :, t].astype(np.uint32), 8)
         cur, c = bs.bitserial_max(cur, nxt)
         cur = cur[:8]
-        cycles += c * E * F
-    out = bs.unpack_values(cur)  # (E, F, C)
-    return jnp.asarray(out, jnp.uint8), cycles
+        cycles += c * B * E * F
+    out = bs.unpack_values(cur)  # (B, E, F, C)
+    return jnp.asarray(out if batched else out[0], jnp.uint8), cycles
 
 
 def nc_avgpool2d(x_q: jax.Array, window: int, stride: int,
                  padding: str = "VALID"):
     """uint8 average pooling: in-array window-sum via the §III-D log tree,
     then the §III-C bit-serial divide (rounded; SAME padding divides by the
-    pad-excluded window population, matching the float reference).
+    pad-excluded window population, matching the float reference — exact
+    under the affine identity only for zero_point == 0, which holds for
+    every post-ReLU activation in the §IV-D pipeline).
 
-    Cycles per output lane group: the widening sum tree over the window
-    plus one 8-bit divide."""
-    xq = np.asarray(x_q, np.int64)
-    H, W, C = xq.shape
+    Accepts ``[H, W, C]`` or ``[B, H, W, C]``.  Cycles per output lane
+    group: the widening sum tree over the window plus one 8-bit divide."""
+    xin = np.asarray(x_q, np.int64)
+    batched = xin.ndim == 4
+    xq = xin if batched else xin[None]
+    B, H, W, C = xq.shape
     ones = np.ones((H, W, 1), np.int64)
     if padding == "SAME":
         ph = _same_pad(H, window, stride)
         pw = _same_pad(W, window, stride)
-        xq = np.pad(xq, (ph, pw, (0, 0)))
+        xq = np.pad(xq, ((0, 0), ph, pw, (0, 0)))
         ones = np.pad(ones, (ph, pw, (0, 0)))
-    win, E, F = _extract_windows(xq, window, window, stride)  # (E,F,W2*C)
+    win, E, F = _extract_windows_batch(xq, window, window, stride)
     w2 = window * window
-    # reduce axis last: (E, F, C, W2) rows of the window population
-    rows = win.reshape(E, F, w2, C).transpose(0, 1, 3, 2).astype(np.uint32)
-    pp = bs.pack_values(rows, 8, row_align=True)
+    # reduce axis last: (B, E, F, C, W2) rows of the window population
+    rows = win.reshape(B, E, F, w2, C).transpose(0, 1, 2, 4, 3)
+    pp = bs.pack_values(rows.astype(np.uint32), 8, row_align=True)
     red, c_red = bs.bitserial_reduce(pp)
-    sums = bs.unpack_values(red)[..., 0]  # (E, F, C)
+    sums = bs.unpack_values(red)[..., 0]  # (B, E, F, C)
     counts, _, _ = _extract_windows(ones, window, window, stride)
     counts = counts.reshape(E, F, w2, 1).sum(axis=2)  # (E, F, 1)
     out = (sums + counts // 2) // counts  # rounded integer divide
-    cycles = int(E * F * (c_red + bs.div_cycles(8)))
-    return jnp.asarray(np.clip(out, 0, 255), jnp.uint8), cycles
+    cycles = int(B * E * F * (c_red + bs.div_cycles(8)))
+    out = np.clip(out, 0, 255)
+    return jnp.asarray(out if batched else out[0], jnp.uint8), cycles
+
+
+def nc_minmax(x_q, bits: int = 32, signed: bool = False):
+    """§IV-D in-cache dynamic range: min AND max of quantized values via a
+    bit-serial log tree (subtract + tag-masked copy per halving step), run
+    entirely in packed word space — only the two scalars per row leave the
+    cache, exactly the "two numbers sent to the CPU" of the paper's
+    quantization pipeline.
+
+    ``x_q``: integer array whose LAST axis is reduced; leading axes (e.g.
+    the image batch) are independent rows advancing in lockstep.  Rows are
+    pre-padded to the next power of two with copies of their first lane so
+    padding never pollutes the min.  ``signed`` treats values as
+    ``bits``-wide two's complement (the int32 accumulator case): the sign
+    plane is biased on the way in and the scalars un-biased on the way out
+    (one extra cycle each way — an XOR pass on a single plane).
+
+    Returns ``(mins, maxs, cycles)`` — arrays shaped like the leading
+    axes — with ``cycles == bitserial.minmax_cycles(K, bits)``
+    (+2 when ``signed``); all rows share the one lockstep tree.
+    """
+    x = np.asarray(x_q)
+    lead = x.shape[:-1]
+    K = x.shape[-1] if x.ndim else 1
+    rows = x.reshape(-1, K).astype(np.int64)
+    bias = (1 << (bits - 1)) if signed else 0
+    u = ((rows + bias) & ((1 << bits) - 1)).astype(np.uint64)
+    P = 1 << max(0, (K - 1).bit_length())
+    padded = np.empty((u.shape[0], P), np.uint64)
+    padded[:, :K] = u
+    padded[:, K:] = u[:, :1]  # neutral pad: a copy of a real lane
+    pp = bs.pack_values(padded, bits, row_align=True)
+    (mn_pp, mx_pp), cycles = bs.bitserial_minmax(pp)
+    mn = bs.unpack_values(mn_pp).reshape(-1) - bias
+    mx = bs.unpack_values(mx_pp).reshape(-1) - bias
+    if signed:
+        cycles += 2  # sign-plane bias in + un-bias out
+    return mn.reshape(lead), mx.reshape(lead), cycles
 
 
 def nc_relu_requant(
@@ -380,12 +479,24 @@ def nc_relu_requant(
     return q.requantize_fixedpoint(acc, m, s, zero_point=out_zp).astype(jnp.uint8)
 
 
-def nc_fc(x: jax.Array, w: jax.Array, x_qp: q.QuantParams, w_qp: q.QuantParams,
-          **conv_kwargs):
-    """FC as a 1x1 conv over a 1x1 'image' (§IV-D); tiling kwargs pass
-    through to :func:`nc_conv2d`."""
-    res = nc_conv2d(np.asarray(x)[None, None, :],
-                    np.asarray(w)[None, None, :, :], x_qp, w_qp, **conv_kwargs)
+def nc_fc(x: jax.Array, w: jax.Array,
+          x_qp: q.QuantParams | Sequence[q.QuantParams],
+          w_qp: q.QuantParams, **conv_kwargs):
+    """FC as a 1x1 conv over a 1x1 'image' (§IV-D).
+
+    ``x``: [K] or batched [B, K] (each row one image's feature vector —
+    the batch folds into the conv's row axis); tiling kwargs pass through
+    to :func:`nc_conv2d`."""
+    xa = np.asarray(x)
+    w4 = np.asarray(w)[None, None, :, :]
+    if xa.ndim == 2:  # batched: [B, K] -> [B, 1, 1, K] image batch
+        res = nc_conv2d(xa[:, None, None, :], w4, x_qp, w_qp, **conv_kwargs)
+        if len(res) == 3:
+            out, cycles, stats = res
+            return out[:, 0, 0], cycles, stats
+        out, cycles = res
+        return out[:, 0, 0], cycles
+    res = nc_conv2d(xa[None, None, :], w4, x_qp, w_qp, **conv_kwargs)
     if len(res) == 3:
         out, cycles, stats = res
         return out[0, 0], cycles, stats

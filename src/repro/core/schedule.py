@@ -1,0 +1,222 @@
+"""Batched slice-scheduler: ONE plan object from mapper to packed engine to
+serving.
+
+The paper's headline throughput comes from *batch scheduling*, not raw MACs:
+filters stay resident in the compute ways while a batch of images streams
+through the reserved I/O way (§VI-C), and even the quantization min/max
+reduction stays in-cache (§IV-D).  This module turns the mapper's layout
+(core/mapper.py) plus a batch size into an explicit, shared execution plan:
+
+* :class:`SlicePlan` — one layer's plan.  Field ↔ paper-section map:
+
+  ===================  =====================================================
+  field                paper
+  ===================  =====================================================
+  ``mapped``           §IV-A/B filter splitting/packing/replication — the
+                       residency layout (filters per array, parallel convs)
+  ``filter_bytes``     §VI-C: filter bytes loaded ONCE per layer per batch
+                       (filters are resident while the batch streams)
+  ``serial_passes``    §IV-B serialized passes per image
+  ``total_passes``     §IV-E layer-serial batching: passes × batch
+  ``tile_rows`` /      packed-engine batch tiling: (image, pixel) rows ×
+  ``tile_filters``     filters per engine tile, bounded by the cache
+                       geometry's bit lines (``geom.compute_slots``)
+  ``batch_tile``       whole images folded into one MAC+reduce tile
+  ``spill_to_dram``    §IV-E: batch-wide outputs that outgrow the reserved
+                       I/O way round-trip DRAM (the simulator's batching
+                       model, now decided in one place)
+  ``quant_passes``     §IV-D lockstep fixed-point requant passes per image
+  ``minmax_cycles``    §IV-D in-cache min/max log tree per image (the two
+                       dynamic-range scalars are all that leaves the cache)
+  ===================  =====================================================
+
+* :class:`NetworkSchedule` — the per-layer plans for a whole network at one
+  batch size, with the aggregate residency/spill accounting.
+
+Consumers (the "one source of truth" contract):
+
+* core/nc_layers.py tiles its packed MAC+reduce work with the plan's
+  ``tile_rows``/``tile_filters`` (batch folded into the packed lane axis),
+* core/simulator.py prices the SAME plan instead of re-deriving residency,
+  so modeled and emulated cycles agree on the layout by construction,
+* models/inception.py executes the schedule end to end (``nc_forward``),
+* launch/serve.py admits request batches sized to the schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Sequence
+
+from repro.core import bitserial as bs
+from repro.core.cache_geometry import CacheGeometry, XEON_E5_35MB
+from repro.core.mapper import (LayerSpec, MappedLayer, check_wordline_budget,
+                               map_layer)
+
+__all__ = ["SlicePlan", "NetworkSchedule", "conv_tiles", "plan_layer",
+           "plan_network"]
+
+ACC_BITS = 32  # reserved-way staging width of a conv partial sum
+
+
+def conv_tiles(E: int, F: int, M: int, K: int,
+               geom: CacheGeometry = XEON_E5_35MB,
+               batch: int = 1,
+               tile_pixels: int | None = None,
+               tile_filters: int | None = None) -> tuple[int, int]:
+    """Tile sizes for the packed engine: (rows, filters) per tile.
+
+    A row is one (image, output pixel) pair — the batch is folded into the
+    row axis, so one MAC+reduce tile serves rows from several images when
+    they fit.  A tile's bit-line count (rows × P padded lanes × filters)
+    is bounded by the cache's compute slots; whole-image row tiles are
+    preferred.  ``tile_pixels``/``tile_filters`` are caller overrides
+    (clamped to the actual work)."""
+    R = batch * E * F
+    P = bs._row_layout(K)[0]
+    cap = max(geom.compute_slots, P)
+    # clamp caller-supplied sizes first so the derived dimension is sized
+    # for the effective tile, not an oversized request
+    if tile_pixels is not None:
+        tile_pixels = min(tile_pixels, R)
+    if tile_filters is not None:
+        tile_filters = min(tile_filters, M)
+    if tile_pixels is None and tile_filters is None:
+        if P * R * M <= cap:
+            return R, M
+        tf = cap // (P * R)
+        if tf >= 1:
+            return R, int(tf)
+        return max(1, cap // P), 1
+    if tile_filters is None:
+        tile_filters = max(1, min(M, cap // (P * tile_pixels)))
+    if tile_pixels is None:
+        tile_pixels = max(1, min(R, cap // (P * tile_filters)))
+    return min(tile_pixels, R), min(tile_filters, M)
+
+
+@dataclasses.dataclass(frozen=True)
+class SlicePlan:
+    """One layer's execution plan (see the module docstring field map)."""
+
+    spec: LayerSpec
+    mapped: MappedLayer
+    batch: int
+    # packed-engine tiling (consumed by core/nc_layers.py)
+    K: int  # reduce lanes per dot row (R*S*C; window elems for pools)
+    row_bits: int  # P = next_pow2(K): padded bit positions per row
+    tile_rows: int  # (image, pixel) rows per engine tile
+    tile_filters: int
+    batch_tile: int  # whole images folded into one engine tile
+    tiles: int  # engine tiles covering the whole batch
+    # residency / movement (§IV-A/B, §VI-C)
+    filter_bytes: int  # loaded once per layer per BATCH (filters resident)
+    input_bytes_per_image: int
+    output_bytes_per_image: int
+    serial_passes: int  # per image (mapper §IV-B)
+    total_passes: int  # serial_passes * batch (§IV-E layer-serial)
+    spill_to_dram: bool  # batch outputs overflow the reserved I/O way
+    spill_bytes_per_image: int  # dump + reload when spilling
+    # §IV-D in-cache quantization
+    quant_passes: int  # lockstep requant passes per image
+    minmax_cycles: int  # in-cache min/max log tree per image
+
+    @property
+    def is_compute(self) -> bool:
+        return self.spec.kind in ("conv", "fc")
+
+
+def plan_layer(spec: LayerSpec,
+               geom: CacheGeometry = XEON_E5_35MB,
+               batch: int = 1,
+               *,
+               tile_pixels: int | None = None,
+               tile_filters: int | None = None) -> SlicePlan:
+    """Map one layer (§IV-A/B) and schedule it for ``batch`` images."""
+    mapped = map_layer(spec, geom)
+    E = F = spec.E
+    if spec.kind in ("conv", "fc"):
+        check_wordline_budget(mapped, geom)
+        K = spec.R * spec.S * spec.C
+        tr, tf = conv_tiles(E, F, spec.M, K, geom, batch,
+                            tile_pixels, tile_filters)
+        pixels = max(E * F, 1)
+        batch_tile = max(1, min(batch, tr // pixels))
+        tiles = (math.ceil(batch * pixels / tr)
+                 * math.ceil(spec.M / max(tf, 1)))
+        filter_bytes = spec.filter_bytes
+        quant_passes = math.ceil(spec.output_bytes / geom.compute_slots)
+        minmax = bs.minmax_cycles(spec.output_bytes, ACC_BITS)
+    else:  # pooling: no filters, no requantization — comparisons in place
+        K = spec.filter_elems
+        tr, tf = batch * E * F, 1
+        batch_tile = batch
+        tiles = 1
+        filter_bytes = 0
+        quant_passes = 0
+        minmax = 0
+    # §IV-E: a layer's batch-wide output set must stay staged until the next
+    # layer consumes it; the reserved way holds inputs + outputs, so a layer
+    # spills once its per-image output exceeds a quarter of the I/O way.
+    cap = geom.io_way_bytes / 2
+    spill = spec.output_bytes > cap / 2
+    return SlicePlan(
+        spec=spec, mapped=mapped, batch=batch,
+        K=K, row_bits=bs._row_layout(K)[0],
+        tile_rows=tr, tile_filters=tf, batch_tile=batch_tile, tiles=tiles,
+        filter_bytes=filter_bytes,
+        input_bytes_per_image=spec.input_bytes,
+        output_bytes_per_image=spec.output_bytes,
+        serial_passes=mapped.serial_passes,
+        total_passes=mapped.serial_passes * batch,
+        spill_to_dram=spill,
+        spill_bytes_per_image=2 * spec.output_bytes if spill else 0,
+        quant_passes=quant_passes,
+        minmax_cycles=minmax,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkSchedule:
+    """Per-layer :class:`SlicePlan` list for one network at one batch size."""
+
+    layers: tuple[SlicePlan, ...]
+    geom: CacheGeometry
+    batch: int
+
+    def plan(self, name: str) -> SlicePlan:
+        for p in self.layers:
+            if p.spec.name == name:
+                return p
+        raise KeyError(name)
+
+    @property
+    def filter_bytes_loaded(self) -> int:
+        """Filter bytes loaded per batch — each layer's filters load ONCE
+        and stay resident while the whole batch streams (§VI-C), so this
+        is independent of ``batch``."""
+        return sum(p.filter_bytes for p in self.layers)
+
+    @property
+    def spill_bytes_per_image(self) -> int:
+        return sum(p.spill_bytes_per_image for p in self.layers)
+
+    @property
+    def total_passes(self) -> int:
+        return sum(p.total_passes for p in self.layers)
+
+    @property
+    def stream_batch_limit(self) -> int:
+        """Images the reserved I/O way can stage at once for the widest
+        layer (inputs + outputs share the way) — the §VI-C streaming
+        bound; batches beyond it spill (see ``spill_to_dram``)."""
+        widest = max(p.input_bytes_per_image + p.output_bytes_per_image
+                     for p in self.layers)
+        return max(1, self.geom.io_way_bytes // widest)
+
+
+def plan_network(specs: Sequence[LayerSpec] | Iterable[LayerSpec],
+                 geom: CacheGeometry = XEON_E5_35MB,
+                 batch: int = 1) -> NetworkSchedule:
+    return NetworkSchedule(
+        tuple(plan_layer(s, geom, batch) for s in specs), geom, batch)

@@ -3,8 +3,11 @@
 Deterministic performance model with two ingredient classes:
 
 MECHANISTIC (derived, no fitting):
-  * the mapping model (core/mapper.py) — filters/array, parallel convs,
-    serial passes; validated against the paper's two worked examples,
+  * the execution plan (core/schedule.py) — filters/array, parallel convs,
+    serial passes, spill decisions; the SAME :class:`NetworkSchedule` the
+    packed-engine emulation executes, so modeled and emulated runs agree
+    on residency by construction (mapping validated against the paper's
+    two worked examples),
   * per-conv compute cycles: ``mac8 * macs_per_line + red_step * log2(C')``
     — reproduces the paper's 2784 cycles/conv for Conv2d_2b exactly,
   * byte counts for filters / inputs / outputs from layer geometry,
@@ -30,7 +33,8 @@ from typing import Iterable, Sequence
 
 from repro.core import bitserial as bs
 from repro.core.cache_geometry import CacheGeometry, XEON_E5_35MB
-from repro.core.mapper import LayerSpec, MappedLayer, map_layer
+from repro.core.mapper import LayerSpec, MappedLayer
+from repro.core.schedule import NetworkSchedule, SlicePlan, plan_layer, plan_network
 
 __all__ = ["SimConstants", "LayerResult", "NetworkResult", "simulate_layer",
            "simulate_network", "modeled_layer_cycles", "throughput", "PAPER"]
@@ -125,6 +129,7 @@ class LayerResult:
     output_s: float
     compute_cycles_per_pass: float
     energy_j: float
+    plan: SlicePlan | None = None  # the schedule entry this result priced
 
     @property
     def compute_s(self) -> float:
@@ -146,11 +151,20 @@ def _fresh_input_fraction(spec: LayerSpec) -> float:
 
 
 def simulate_layer(
-    spec: LayerSpec,
+    spec: LayerSpec | SlicePlan,
     geom: CacheGeometry = XEON_E5_35MB,
     const: SimConstants = SimConstants(),
 ) -> LayerResult:
-    m = map_layer(spec, geom)
+    """Price one layer.  Accepts a raw :class:`LayerSpec` (planned here at
+    batch 1) or a :class:`SlicePlan` straight from the schedule — the same
+    plan object the packed-engine emulation executes, so residency, pass
+    counts and spill decisions are never re-derived."""
+    if isinstance(spec, SlicePlan):
+        plan = spec
+        spec = plan.spec
+    else:
+        plan = plan_layer(spec, geom)
+    m = plan.mapped
     f_hz = geom.compute_freq_hz
 
     if spec.kind in ("maxpool", "avgpool"):
@@ -159,15 +173,15 @@ def simulate_layer(
         pass_cycles = cmps * const.pool_cmp_cycles
         if spec.kind == "avgpool":
             pass_cycles = spec.filter_elems * bs.add_cycles(16) + bs.div_cycles(8)
-        pool_s = m.serial_passes * pass_cycles / f_hz
+        pool_s = plan.serial_passes * pass_cycles / f_hz
         input_s = spec.window_count * spec.filter_elems * _fresh_input_fraction(spec) / const.input_bw
         output_s = spec.output_bytes / const.output_bw
         energy = (
-            m.serial_passes * pass_cycles * geom.compute_arrays * m.utilization
+            plan.serial_passes * pass_cycles * geom.compute_arrays * m.utilization
             * geom.compute_energy_pj * 1e-12
         )
         return LayerResult(spec, m, 0.0, 0.0, 0.0, pool_s, 0.0, input_s,
-                           output_s, pass_cycles, energy)
+                           output_s, pass_cycles, energy, plan)
 
     # ---- convolution / fc -------------------------------------------------
     mac_cycles = const.mac8_cycles * m.macs_per_line
@@ -175,24 +189,25 @@ def simulate_layer(
     red_cycles = const.reduce_step_cycles * steps + const.reduce_xstep_cycles * max(steps - 5, 0)
     per_conv = mac_cycles + red_cycles
 
-    mac_s = m.serial_passes * (mac_cycles + const.pass_stage_cycles) / f_hz
-    reduce_s = m.serial_passes * red_cycles / f_hz
+    mac_s = plan.serial_passes * (mac_cycles + const.pass_stage_cycles) / f_hz
+    reduce_s = plan.serial_passes * red_cycles / f_hz
 
     # requantization (+folded BN) applies to output elements in lockstep
-    # across lanes: once per lane-full of outputs, plus the per-layer
-    # min/max tree + inter-array bus reduction (§IV-D).
-    lanes = geom.compute_slots
-    quant_passes = math.ceil(spec.output_bytes / lanes)
-    quant_s = (quant_passes * const.quant_pass_cycles
+    # across lanes: once per lane-full of outputs (the plan's quant
+    # passes), plus the per-layer min/max tree + inter-array bus reduction
+    # (§IV-D; the calibrated constant — the schedule's mechanistic
+    # ``minmax_cycles`` is the emulation-side per-tensor tree).
+    quant_s = (plan.quant_passes * const.quant_pass_cycles
                + const.quant_layer_overhead_cycles) / f_hz
 
-    filter_bytes = spec.filter_bytes
+    # §VI-C residency: filters load once per layer per batch
+    filter_bytes = plan.filter_bytes
     filter_s = filter_bytes / const.filter_bw
     input_stream = spec.conv_count * spec.filter_elems * _fresh_input_fraction(spec)
     input_s = input_stream / const.input_bw
     output_s = spec.output_bytes / const.output_bw
 
-    compute_cycles = m.serial_passes * (per_conv + const.pass_stage_cycles) + quant_s * f_hz
+    compute_cycles = plan.serial_passes * (per_conv + const.pass_stage_cycles) + quant_s * f_hz
     active = geom.compute_arrays * m.utilization
     energy = (
         compute_cycles * active * geom.compute_energy_pj * 1e-12
@@ -200,7 +215,7 @@ def simulate_layer(
         + (input_stream + spec.output_bytes) * const.bus_pj_per_byte * 1e-12
     )
     return LayerResult(spec, m, mac_s, reduce_s, quant_s, 0.0, filter_s,
-                       input_s, output_s, per_conv, energy)
+                       input_s, output_s, per_conv, energy, plan)
 
 
 def modeled_layer_cycles(
@@ -233,6 +248,7 @@ class NetworkResult:
     layers: tuple[LayerResult, ...]
     geom: CacheGeometry
     const: SimConstants
+    schedule: NetworkSchedule | None = None  # the plan this result priced
 
     @property
     def filter_s(self) -> float:
@@ -292,27 +308,48 @@ class NetworkResult:
             pool=self.pool_s / t,
         )
 
+    @property
+    def filter_bytes_loaded(self) -> int:
+        """Filter bytes loaded per batch — once per layer, independent of
+        batch size, because filters stay resident while the batch streams
+        (§VI-C; the schedule's residency accounting)."""
+        if self.schedule is not None:
+            return self.schedule.filter_bytes_loaded
+        return sum(l.spec.filter_bytes for l in self.layers)
+
     def spill_s_per_image(self) -> float:
         """Batched mode: a layer's batch-wide output set must stay resident
         until the next layer consumes it; when it exceeds the reserved way it
-        round-trips DRAM (§IV-E: 'the first five [layers]' for Inception v3)."""
+        round-trips DRAM (§IV-E: 'the first five [layers]' for Inception v3).
+        The spill decision lives in the schedule (one source of truth); a
+        hand-built NetworkResult without one falls back to the same rule."""
+        if self.schedule is not None:
+            return self.schedule.spill_bytes_per_image / self.const.dram_bw
         cap = self.geom.io_way_bytes / 2  # staging holds inputs + outputs
-        spill = 0.0
-        for l in self.layers:
-            if l.spec.output_bytes > cap / 2:  # per-image; batch >= 2 overflows
-                spill += 2 * l.spec.output_bytes  # dump + reload
+        spill = sum(2 * l.spec.output_bytes for l in self.layers
+                    if l.spec.output_bytes > cap / 2)
         return spill / self.const.dram_bw
 
 
 def simulate_network(
-    specs: Sequence[LayerSpec],
+    specs: Sequence[LayerSpec] | NetworkSchedule,
     geom: CacheGeometry = XEON_E5_35MB,
     const: SimConstants = SimConstants(),
     base_geom: CacheGeometry = XEON_E5_35MB,
 ) -> NetworkResult:
+    """Price a network.  Accepts the layer specs (planned here at batch 1)
+    or a ready :class:`NetworkSchedule` — e.g. the very object a batched
+    ``nc_forward``/serving run executed — so residency, spill and pass
+    counts come from one plan."""
+    if isinstance(specs, NetworkSchedule):
+        schedule = specs
+        geom = schedule.geom
+    else:
+        schedule = plan_network(specs, geom, batch=1)
     const = const.validate().scaled_bandwidths(geom, base_geom)
-    return NetworkResult(tuple(simulate_layer(s, geom, const) for s in specs),
-                         geom, const)
+    return NetworkResult(
+        tuple(simulate_layer(p, geom, const) for p in schedule.layers),
+        geom, const, schedule)
 
 
 def throughput(result: NetworkResult, batch: int, sockets: int = 2) -> float:

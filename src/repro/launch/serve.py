@@ -1,6 +1,7 @@
-"""Batched serving driver: continuous-batching decode over a prefix cache.
+"""Batched serving drivers: LM continuous-batching decode AND Neural Cache
+batched image inference.
 
-The serving loop implements the standard production pattern:
+The LM serving loop implements the standard production pattern:
 
   * requests queue up; a scheduler packs up to ``max_batch`` active
     sequences into the fixed decode batch (padding inactive slots),
@@ -11,11 +12,20 @@ The serving loop implements the standard production pattern:
     step),
   * finished sequences (eos or max_tokens) free their slot for the queue.
 
+The Neural Cache path (:class:`NCServingEngine`) serves the paper's
+workload the paper's way (§VI-C): admitted image requests form one batch
+that streams through the reserved I/O way while the filters stay resident
+— the engine plans a :class:`~repro.core.schedule.NetworkSchedule` once
+per batch size and routes every admitted batch through
+``models.inception.nc_forward(batch=N)`` (batch folded into the packed
+lane axis, in-cache §IV-D min/max quantization, bucketed-jit engine).
+
 Weights can be served quantized (W8A8 via repro.quant) — the paper's
 inference pipeline — with ``--quantize``.
 
 Usage:
     python -m repro.launch.serve --arch olmo-1b --reduced --requests 12
+    python -m repro.launch.serve --neural-cache --requests 8 --max-batch 4
 """
 from __future__ import annotations
 
@@ -49,11 +59,24 @@ class Slot:
     pos: int = 0
 
 
-class ServingEngine:
+class BatchQueueEngine:
+    """Shared admission plumbing: a request queue drained by ``step()``."""
+
+    def __init__(self):
+        self.queue = []
+        self.completed = []
+        self.steps = 0
+
+    def submit(self, req) -> None:
+        self.queue.append(req)
+
+
+class ServingEngine(BatchQueueEngine):
     """Fixed-batch continuous-batching engine over decode_step."""
 
     def __init__(self, cfg, params, *, max_batch: int = 4,
                  max_len: int = 512, eos: int = -1):
+        super().__init__()
         self.cfg, self.params = cfg, params
         self.max_batch, self.max_len, self.eos = max_batch, max_len, eos
         self.caches = T.init_caches(cfg, max_batch, max_len)
@@ -61,13 +84,6 @@ class ServingEngine:
         self.tokens = jnp.zeros((max_batch, 1), jnp.int32)
         self._decode = jax.jit(
             lambda p, t, c, pos: T.decode_step(cfg, p, t, c, pos))
-        self.queue: list[Request] = []
-        self.completed: list[Request] = []
-        self.steps = 0
-
-    # -- admission ---------------------------------------------------------
-    def submit(self, req: Request) -> None:
-        self.queue.append(req)
 
     def _admit(self) -> None:
         for i, slot in enumerate(self.slots):
@@ -125,9 +141,117 @@ def _write_slot(caches, caches1, i: int):
     return jax.tree.map(leaf, caches, caches1)
 
 
+# ---------------------------------------------------------------------------
+# Neural Cache image serving (§VI-C batched streaming)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class NCRequest:
+    rid: int
+    image: np.ndarray  # [H, W, 3] float32 in [0, 1]
+    logits: np.ndarray | None = None
+    done: bool = False
+
+
+class NCServingEngine(BatchQueueEngine):
+    """Batched Neural Cache inference server.
+
+    Each ``step()`` admits up to ``max_batch`` queued images and executes
+    them as ONE batched forward through the bit-serial emulation
+    (``models.inception.nc_forward``): the batch folds into the packed
+    lane axis, filters pack once per layer per batch, and quantization
+    ranges come from the in-cache min/max tree — the serving half of the
+    paper's 604 inf/s headline (§VI-C).  The per-layer tiling comes from a
+    :class:`~repro.core.schedule.NetworkSchedule` planned once per batch
+    size (ragged final batches plan-and-cache their own), so the mapper,
+    the packed engine and the server all execute the same plan object.
+    """
+
+    def __init__(self, params, config=None, *, max_batch: int = 4,
+                 geom=None, engine: str | None = None):
+        from repro.core import schedule as nc_schedule
+        from repro.core.cache_geometry import XEON_E5_35MB
+        from repro.models import inception
+
+        super().__init__()
+        self._inception = inception
+        self._plan_network = nc_schedule.plan_network
+        self.config = config or inception.REDUCED
+        self.params = params
+        self.max_batch = max_batch
+        self.geom = geom or XEON_E5_35MB
+        self.engine = engine
+        self.specs = inception.inception_v3_specs(self.config)
+        self.schedule = self._plan_network(self.specs, self.geom,
+                                           batch=max_batch)
+        self._schedules = {max_batch: self.schedule}
+        # resident filters quantize ONCE per deployment, not once per batch
+        self.wpack = inception.prepare_conv_weights(params, self.config)
+        self.reports = []
+
+    def _schedule_for(self, n: int):
+        if n not in self._schedules:
+            self._schedules[n] = self._plan_network(self.specs, self.geom,
+                                                    batch=n)
+        return self._schedules[n]
+
+    def step(self) -> bool:
+        if not self.queue:
+            return False
+        batch = [self.queue.pop(0)
+                 for _ in range(min(self.max_batch, len(self.queue)))]
+        x = np.stack([np.asarray(r.image, np.float32) for r in batch])
+        logits, report = self._inception.nc_forward(
+            self.params, x, config=self.config, geom=self.geom,
+            engine=self.engine, schedule=self._schedule_for(len(batch)),
+            wpack=self.wpack)
+        for i, r in enumerate(batch):
+            r.logits = np.asarray(logits[i])
+            r.done = True
+            self.completed.append(r)
+        self.reports.append(report)
+        self.steps += 1
+        return True
+
+    def run(self) -> list[NCRequest]:
+        while self.step():
+            pass
+        return self.completed
+
+
+def _main_neural_cache(args) -> int:
+    from repro.core.simulator import simulate_network, throughput
+    from repro.models import inception
+
+    cfg = inception.reduced_config()
+    params = inception.init_params(jax.random.key(0), config=cfg)
+    engine = NCServingEngine(params, cfg, max_batch=args.max_batch)
+    rng = np.random.default_rng(0)
+    for r in range(args.requests):
+        engine.submit(NCRequest(
+            rid=r, image=rng.random((cfg.img, cfg.img, 3),
+                                    dtype=np.float32)))
+    t0 = time.perf_counter()
+    done = engine.run()
+    dt = time.perf_counter() - t0
+    # modeled throughput from the engine's own schedule: filter load once
+    # per batch + per-image marginal + spill (simulator.throughput), NOT
+    # images / summed per-image latencies (which overstates by ~batch)
+    res = simulate_network(engine.schedule)
+    tp = throughput(res, args.max_batch, sockets=1)
+    print(f"[serve-nc] {len(done)} images in {dt:.2f}s emulated "
+          f"({len(done)/dt:.2f} img/s wall, {engine.steps} batches of "
+          f"<= {args.max_batch}); modeled: {res.latency_s*1e3:.3f} ms/img "
+          f"unbatched, {tp:.0f} inf/s at batch {args.max_batch} "
+          f"(single socket)")
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=sorted(REGISTRY))
+    ap.add_argument("--arch", choices=sorted(REGISTRY))
+    ap.add_argument("--neural-cache", action="store_true",
+                    help="serve Inception images through the Neural Cache "
+                         "emulation instead of an LM")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=4)
@@ -136,6 +260,10 @@ def main() -> int:
     ap.add_argument("--max-tokens", type=int, default=16)
     args = ap.parse_args()
 
+    if args.neural_cache:
+        return _main_neural_cache(args)
+    if args.arch is None:
+        ap.error("--arch is required unless --neural-cache is given")
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced_config(cfg)

@@ -34,7 +34,9 @@ from repro.core.cache_geometry import CacheGeometry, XEON_E5_35MB
 from repro.core.mapper import LayerSpec
 from repro.core import nc_layers as nc
 from repro.core import quantize as q
+from repro.core import schedule as sched
 from repro.core import simulator as sim
+from repro.core import bitserial as bs
 
 # ---------------------------------------------------------------------------
 # Structure: op = ("conv", R, S, M, stride, pad) | ("maxpool"|"avgpool", R, stride, pad)
@@ -373,9 +375,13 @@ def apply(params: dict, x: jax.Array, quant: bool = False,
 
 # ---------------------------------------------------------------------------
 # End-to-end quantized forward pass THROUGH THE EMULATION (§IV-D pipeline):
-# every conv/pool/fc runs on the packed bit-serial engine; the CPU-side glue
-# (per-layer min/max -> scale/zero-point, the "two scalars" of §IV-D) stays
-# in float, exactly as the paper offloads it.
+# every conv/pool/fc runs on the packed bit-serial engine; activations stay
+# *quantized uint8 residents* between layers.  The per-layer dynamic range is
+# computed IN-CACHE by the nc_minmax log tree — only the two integer scalars
+# per image leave the array, the CPU answers with a fixed-point multiplier +
+# zero point, and the requantization runs back in-cache.  No CPU-side float
+# min/max ever touches an activation tensor in the layer loop; the only
+# offline float ranges are the static weights'.
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class NCLayerReport:
@@ -391,12 +397,17 @@ class NCLayerReport:
     modeled_s: float  # modeled wall time incl. data movement
     lanes: int = 0
     zero_operand_lanes: int = 0  # EIE-style tag-skippable lanes (note only)
+    batch: int = 1  # images folded into the packed lane axis
+    minmax_cycles: int = 0  # §IV-D in-cache min/max tree (inside emulated)
+    filter_loads: int = 0  # filter packs this batch (§VI-C residency: 1)
 
 
 @dataclasses.dataclass(frozen=True)
 class NCForwardReport:
     config_name: str
     layers: tuple[NCLayerReport, ...]
+    batch: int = 1
+    concat_requant_cycles: int = 0  # branch -> common-scale requant at concats
 
     @property
     def total_emulated_cycles(self) -> int:
@@ -433,70 +444,137 @@ class NCForwardReport:
         return "\n".join(lines)
 
 
-def _nc_quantize_dynamic(x: np.ndarray) -> q.QuantParams:
-    return q.choose_qparams(jnp.float32(float(x.min())),
-                            jnp.float32(float(x.max())))
+_REQUANT_PASS_CYCLES = bs.mul_cycles(32) + bs.add_cycles(32)  # per lockstep pass
 
 
-def _nc_run_conv(name, x, op, params, spec, geom, const, engine, records):
-    _, r, s, m, stride, pad = op
-    p = params[name]
-    # BN scale folds into the filter; bias is added by the requant epilogue
-    wf = np.asarray(p["w"], np.float32) * np.asarray(p["scale"], np.float32)
-    bias = np.asarray(p["bias"], np.float32)
-    x_qp = _nc_quantize_dynamic(x)
-    w_qp = _nc_quantize_dynamic(wf)
+def prepare_conv_weights(params: dict, config: InceptionConfig) -> dict:
+    """Offline weight quantization (the paper quantizes weights ahead of
+    time — their float ranges are static and never enter the per-layer
+    loop).  BN scale folds into the filter; bias is applied as an integer
+    add in the requant epilogue.
+
+    ``nc_forward`` calls this once per invocation by default; serving
+    engines precompute it once and pass ``wpack=`` so resident filters are
+    quantized exactly once per deployment, not once per batch."""
+    packed = {}
+    for name, _, _, _, _ in _iter_convs(config):
+        p = params[name]
+        wf = np.asarray(p["w"], np.float32) * np.asarray(p["scale"], np.float32)
+        w_qp = q.choose_qparams(jnp.float32(wf.min()), jnp.float32(wf.max()))
+        wq = nc._quantize_np(wf, w_qp).astype(np.uint8)
+        packed[name] = (wq, w_qp, np.asarray(p["bias"], np.float32))
+    return packed
+
+
+def _requant_image(acc_b: np.ndarray, real_multiplier: float,
+                   zero_point: int) -> np.ndarray:
+    """In-cache fixed-point requantization of one image's int32 staging
+    (§IV-D: integer multiply + round-shift, bit-exact with the shifter).
+    Host int64 arithmetic — the jnp path truncates to int32 without
+    ``jax_enable_x64`` and the 31-bit mantissa product needs 63 bits."""
+    mult, shift = q.fixed_point_multiplier(jnp.float32(real_multiplier))
+    mult, shift = int(mult), int(shift)
+    rounded = (acc_b.astype(np.int64) * mult + (1 << (shift - 1))) >> shift
+    return np.clip(rounded + zero_point, 0, 255).astype(np.uint8)
+
+
+def _nc_run_conv(name, actq, act_qps, op, wpack, spec, plan, geom, const,
+                 engine, records):
+    _, r, s, m_, stride, pad = op
+    wq, w_qp, bias = wpack[name]
     acc, cycles, stats = nc.nc_conv2d(
-        x, wf, x_qp, w_qp, stride, padding=pad, geom=geom,
-        layer_spec=spec, engine=engine, return_stats=True)
-    out = (np.asarray(acc, np.float32)
-           * np.float32(x_qp.scale) * np.float32(w_qp.scale) + bias)
-    out = np.maximum(out, 0.0)  # in-cache MSB-masked ReLU
+        actq, wq, act_qps, w_qp, stride, padding=pad, geom=geom,
+        layer_spec=spec, plan=plan, engine=engine, return_stats=True)
+    acc = np.asarray(acc, np.int64)  # [B, E, F, M] int32 staging
+    B = acc.shape[0]
+    # §IV-D epilogue, all in-cache: integer bias add (BN-folded), MSB-masked
+    # ReLU, the min/max log tree, then fixed-point requant.  Only the two
+    # integer scalars per image leave the array.
+    sxw = np.array([np.float32(qp.scale) * np.float32(w_qp.scale)
+                    for qp in act_qps], np.float64)
+    bias_q = np.round(bias[None, :] / sxw[:, None]).astype(np.int64)  # (B, M)
+    acc = np.maximum(acc + bias_q[:, None, None, :], 0)
+    mn, mx, c_mm = nc.nc_minmax(acc.reshape(B, -1), bits=32, signed=True)
+    cycles += int(c_mm)
+    yq = np.empty(acc.shape, np.uint8)
+    out_qps = []
+    for b in range(B):
+        # the CPU-side scalar step: two integers in, multiplier + zp out
+        qp = q.choose_qparams(jnp.float32(mn[b] * sxw[b]),
+                              jnp.float32(mx[b] * sxw[b]))
+        yq[b] = _requant_image(acc[b], sxw[b] / float(qp.scale),
+                               int(qp.zero_point))
+        out_qps.append(qp)
+    cycles += B * plan.quant_passes * _REQUANT_PASS_CYCLES
     modeled = sim.modeled_layer_cycles(spec, geom, const)
     records.append(NCLayerReport(
-        name=name, kind="conv", out_shape=tuple(out.shape),
+        name=name, kind="conv", out_shape=tuple(yq.shape),
         emulated_cycles=int(cycles), modeled_cycles=modeled["total_cycles"],
         serial_passes=modeled["serial_passes"], modeled_s=modeled["total_s"],
-        lanes=stats.lanes, zero_operand_lanes=stats.zero_operand_lanes))
-    return out
+        lanes=stats.lanes, zero_operand_lanes=stats.zero_operand_lanes,
+        batch=B, minmax_cycles=int(c_mm), filter_loads=stats.filter_loads))
+    return yq, out_qps
 
 
-def _nc_run_pool(name, x, op, spec, geom, const, records):
+def _nc_run_pool(name, actq, act_qps, op, spec, geom, const, records):
     kind, r, stride, pad = op
-    x_qp = _nc_quantize_dynamic(x)
-    from repro.core.nc_layers import _quantize_np  # host quantize mirror
-    xq = _quantize_np(x, x_qp).astype(np.uint8)
     if kind == "maxpool":
-        out_q, cycles = nc.nc_maxpool2d(jnp.asarray(xq), r, stride,
-                                        padding=pad)
+        out_q, cycles = nc.nc_maxpool2d(actq, r, stride, padding=pad)
     else:
-        out_q, cycles = nc.nc_avgpool2d(jnp.asarray(xq), r, stride,
-                                        padding=pad)
-    out = (np.asarray(out_q, np.float32) - int(x_qp.zero_point)) \
-        * np.float32(x_qp.scale)
+        out_q, cycles = nc.nc_avgpool2d(actq, r, stride, padding=pad)
+    out_q = np.asarray(out_q, np.uint8)
     modeled = sim.modeled_layer_cycles(spec, geom, const)
     records.append(NCLayerReport(
-        name=name, kind=kind, out_shape=tuple(out.shape),
+        name=name, kind=kind, out_shape=tuple(out_q.shape),
         emulated_cycles=int(cycles), modeled_cycles=modeled["total_cycles"],
-        serial_passes=modeled["serial_passes"], modeled_s=modeled["total_s"]))
-    return out
+        serial_passes=modeled["serial_passes"], modeled_s=modeled["total_s"],
+        batch=out_q.shape[0]))
+    # pooling is order/affine-transparent: quantization passes through
+    return out_q, act_qps
 
 
-def _nc_apply_op(x, name, op, params, specs, geom, const, engine, records):
+def _nc_concat(outs, state):
+    """Concatenate branch outputs along channels, requantizing every branch
+    to a per-image common scale in-cache (branches carry their own dynamic
+    ranges; the CPU sees only their qparams — scalars that already left)."""
+    B = outs[0][0].shape[0]
+    cat_qps = []
+    pieces = [np.empty(yq.shape, np.uint8) for yq, _ in outs]
+    for b in range(B):
+        lo = min(float((qp.qmin - int(qp.zero_point)) * np.float32(qp.scale))
+                 for _, qps in outs for qp in (qps[b],))
+        hi = max(float((qp.qmax - int(qp.zero_point)) * np.float32(qp.scale))
+                 for _, qps in outs for qp in (qps[b],))
+        qp_c = q.choose_qparams(jnp.float32(lo), jnp.float32(hi))
+        for i, (yq, qps) in enumerate(outs):
+            qp_i = qps[b]
+            accq = yq[b].astype(np.int64) - int(qp_i.zero_point)
+            pieces[i][b] = _requant_image(
+                accq, float(qp_i.scale) / float(qp_c.scale),
+                int(qp_c.zero_point))
+        cat_qps.append(qp_c)
+    state["concat_requant_cycles"] += B * len(outs) * _REQUANT_PASS_CYCLES
+    return np.concatenate(pieces, axis=-1), cat_qps
+
+
+def _nc_apply_op(actq, act_qps, name, op, wpack, specs, plans, geom, const,
+                 engine, records, state):
     if op[0] == "conv":
-        return _nc_run_conv(name, x, op, params, specs[name], geom, const,
-                            engine, records)
+        return _nc_run_conv(name, actq, act_qps, op, wpack, specs[name],
+                            plans[name], geom, const, engine, records)
     if op[0] in ("maxpool", "avgpool"):
-        return _nc_run_pool(name, x, op, specs[name], geom, const, records)
+        return _nc_run_pool(name, actq, act_qps, op, specs[name], geom,
+                            const, records)
     if op[0] == "split":
         outs = []
         for i, sub in enumerate(op[1:]):
-            y = x
+            yq, qps = actq, act_qps
             for j, sop in enumerate(sub):
-                y = _nc_apply_op(y, f"{name}_s{i}_{j}", sop, params, specs,
-                                 geom, const, engine, records)
-            outs.append(y)
-        return np.concatenate(outs, axis=-1)
+                yq, qps = _nc_apply_op(yq, qps, f"{name}_s{i}_{j}", sop,
+                                       wpack, specs, plans, geom, const,
+                                       engine, records, state)
+            outs.append((yq, qps))
+        return _nc_concat(outs, state)
     raise ValueError(op)
 
 
@@ -504,52 +582,94 @@ def nc_forward(params: dict, x: jax.Array,
                config: InceptionConfig = REDUCED,
                geom: CacheGeometry = XEON_E5_35MB,
                const: sim.SimConstants = sim.SimConstants(),
-               engine: str = "host"):
+               engine: str | None = None,
+               schedule: sched.NetworkSchedule | None = None,
+               wpack: dict | None = None):
     """Quantized Inception forward pass through the bit-serial emulation.
 
-    x: [H, W, 3] float32 (single image).  Every conv, pool and the FC run
-    on the packed word engine (tiled, packed-resident); per-layer dynamic
-    quantization mirrors §IV-D (min/max to the CPU, fixed-point requant
-    back).  Returns ``(logits [classes], NCForwardReport)`` — the report
-    pairs each layer's emulated arithmetic cycles with the analytic
-    model's serialized-pass cycles and modeled wall time.
+    x: [H, W, 3] or batched [B, H, W, 3] float32 in [0, 1].  Every conv,
+    pool and the FC run on the packed word engine, tiled by the layer's
+    :class:`~repro.core.schedule.SlicePlan` with the batch folded into the
+    packed lane axis (one MAC+reduce serves a whole batch tile, filters
+    packed once per layer per batch — §VI-C residency).
+
+    Activations stay quantized uint8 between layers; each layer's dynamic
+    range comes from the IN-CACHE ``nc_minmax`` log tree (§IV-D) — only
+    two integer scalars per image leave the array, and the requantization
+    runs back in-cache as a fixed-point multiply.  Quantization is
+    per-image, so batched outputs are bit-identical to single-image runs.
+
+    ``engine=None`` resolves to the bucketed-jit engine once the
+    compilation cache amortizes (batch >= 2), else the host engine.
+    ``schedule`` accepts a precomputed :class:`NetworkSchedule` (the
+    serving path plans once per batch size); by default one is planned
+    here, and the SAME object prices the run via
+    ``simulator.simulate_network(schedule)``.  ``wpack`` accepts the
+    output of :func:`prepare_conv_weights` so resident filters quantize
+    once per deployment instead of once per call.
+
+    Returns ``(logits [B?, classes], NCForwardReport)`` — the report pairs
+    each layer's emulated arithmetic cycles (min/max tree included) with
+    the analytic model's serialized-pass cycles and modeled wall time.
     """
-    specs = {s.name: s for s in inception_v3_specs(config)}
+    xin = np.asarray(x, np.float32)
+    batched = xin.ndim == 4
+    x4 = xin if batched else xin[None]
+    assert x4.ndim == 4, "nc_forward takes [H, W, 3] or [B, H, W, 3]"
+    B = x4.shape[0]
+    if engine is None:
+        engine = "jit" if B >= 2 else "host"
+    specs_list = inception_v3_specs(config)
+    specs = {s.name: s for s in specs_list}
+    if schedule is None:
+        schedule = sched.plan_network(specs_list, geom, batch=B)
+    plans = {p.spec.name: p for p in schedule.layers}
+    if wpack is None:
+        wpack = prepare_conv_weights(params, config)
     records: list[NCLayerReport] = []
-    act = np.asarray(x, np.float32)
-    assert act.ndim == 3, "nc_forward emulates a single [H, W, 3] image"
+    state = {"concat_requant_cycles": 0}
+
+    # §IV-D input quantization: images arrive as uint8 pixels — a static
+    # [0, 1] range, no min/max ever computed on an activation tensor.
+    actq = np.clip(np.round(x4 * np.float32(255.0)), 0, 255).astype(np.uint8)
+    act_qps = [q.QuantParams(scale=np.float32(1.0 / 255.0), zero_point=0)] * B
+
     for name, op in config.stem:
-        act = _nc_apply_op(act, name, op, params, specs, geom, const, engine,
-                           records)
+        actq, act_qps = _nc_apply_op(actq, act_qps, name, op, wpack, specs,
+                                     plans, geom, const, engine, records,
+                                     state)
     for bname, branches in config.mixed:
         outs = []
         for bi, branch in enumerate(branches):
-            y = act
+            yq, qps = actq, act_qps
             for oi, op in enumerate(branch):
-                y = _nc_apply_op(y, f"{bname}_b{bi}_{oi}", op, params, specs,
-                                 geom, const, engine, records)
-            outs.append(y)
-        act = np.concatenate(outs, axis=-1)
+                yq, qps = _nc_apply_op(yq, qps, f"{bname}_b{bi}_{oi}", op,
+                                       wpack, specs, plans, geom, const,
+                                       engine, records, state)
+            outs.append((yq, qps))
+        actq, act_qps = _nc_concat(outs, state)
     # global average pool through the array, then FC as a 1x1 conv
-    h = act.shape[0]
-    act = _nc_run_pool("AvgPool", act, ("avgpool", h, 1, "VALID"),
-                       specs["AvgPool"], geom, const, records)
-    act = act.reshape(-1)
-    p = params["FullyConnected"]
-    wf = (np.asarray(p["w"], np.float32)[0, 0]
-          * np.asarray(p["scale"], np.float32))
-    x_qp = _nc_quantize_dynamic(act)
-    w_qp = _nc_quantize_dynamic(wf)
+    h = actq.shape[1]
+    actq, act_qps = _nc_run_pool("AvgPool", actq, act_qps,
+                                 ("avgpool", h, 1, "VALID"),
+                                 specs["AvgPool"], geom, const, records)
+    actq = actq.reshape(B, -1)
+    wq, w_qp, fc_bias = wpack["FullyConnected"]
     spec = specs["FullyConnected"]
-    acc, cycles, stats = nc.nc_fc(act, wf, x_qp, w_qp, geom=geom,
-                                  layer_spec=spec, engine=engine,
-                                  return_stats=True)
-    logits = (np.asarray(acc, np.float32) * np.float32(x_qp.scale)
-              * np.float32(w_qp.scale) + np.asarray(p["bias"], np.float32))
+    acc, cycles, stats = nc.nc_fc(actq, wq[0, 0], act_qps, w_qp, geom=geom,
+                                  layer_spec=spec, plan=plans["FullyConnected"],
+                                  engine=engine, return_stats=True)
+    sxw = np.array([np.float32(qp.scale) * np.float32(w_qp.scale)
+                    for qp in act_qps], np.float32)
+    logits = (np.asarray(acc, np.float32) * sxw[:, None]
+              + fc_bias[None, :].astype(np.float32))
     modeled = sim.modeled_layer_cycles(spec, geom, const)
     records.append(NCLayerReport(
         name="FullyConnected", kind="fc", out_shape=tuple(logits.shape),
         emulated_cycles=int(cycles), modeled_cycles=modeled["total_cycles"],
         serial_passes=modeled["serial_passes"], modeled_s=modeled["total_s"],
-        lanes=stats.lanes, zero_operand_lanes=stats.zero_operand_lanes))
-    return jnp.asarray(logits), NCForwardReport(config.name, tuple(records))
+        lanes=stats.lanes, zero_operand_lanes=stats.zero_operand_lanes,
+        batch=B, filter_loads=stats.filter_loads))
+    report = NCForwardReport(config.name, tuple(records), batch=B,
+                             concat_requant_cycles=state["concat_requant_cycles"])
+    return jnp.asarray(logits if batched else logits[0]), report

@@ -1,0 +1,167 @@
+"""Slice-scheduler: one plan object from mapper -> packed engine -> serving.
+
+Covers SlicePlan/NetworkSchedule invariants, batch tiling against the cache
+geometry, §VI-C filter residency (bytes loaded once per layer per batch),
+the §IV-E spill decision as the simulator's single source of truth, and
+simulate_network parity when consuming a schedule."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import bitserial as bs
+from repro.core.cache_geometry import XEON_E5_35MB
+from repro.core.mapper import LayerSpec, map_layer
+from repro.core.schedule import (NetworkSchedule, SlicePlan, conv_tiles,
+                                 plan_layer, plan_network)
+from repro.core.simulator import PAPER, simulate_network, throughput
+from repro.models.inception import inception_v3_specs
+
+GEOM = XEON_E5_35MB
+
+
+def _conv_spec(name="c", H=16, R=3, C=8, M=16, E=14, stride=1):
+    return LayerSpec(name=name, kind="conv", H=H, R=R, S=R, C=C, M=M, E=E,
+                     stride=stride)
+
+
+# ---------------------------------------------------------------------------
+# plan_layer invariants
+# ---------------------------------------------------------------------------
+def test_plan_matches_mapper():
+    spec = _conv_spec()
+    plan = plan_layer(spec, GEOM)
+    m = map_layer(spec, GEOM)
+    assert plan.mapped == m
+    assert plan.serial_passes == m.serial_passes
+    assert plan.filter_bytes == spec.filter_bytes
+    assert plan.K == spec.R * spec.S * spec.C
+    assert plan.row_bits == 1 << (plan.K - 1).bit_length()
+    assert plan.quant_passes == math.ceil(spec.output_bytes / GEOM.compute_slots)
+    assert plan.minmax_cycles == bs.minmax_cycles(spec.output_bytes, 32)
+
+
+def test_plan_tile_bound_by_compute_slots():
+    """A tile's bit lines (rows x P x filters) never exceed the geometry."""
+    for batch in (1, 4, 16):
+        for spec in (_conv_spec(), _conv_spec(C=128, M=64, E=35, R=3, H=37),
+                     _conv_spec(C=3, M=8, E=39, H=79, stride=2)):
+            plan = plan_layer(spec, GEOM, batch)
+            used = plan.row_bits * plan.tile_rows * plan.tile_filters
+            assert used <= max(GEOM.compute_slots, plan.row_bits), (batch, spec)
+            # tiles cover all the work
+            pixels = spec.E * spec.E
+            assert (plan.tiles >= math.ceil(batch * pixels / plan.tile_rows)
+                    * math.ceil(spec.M / plan.tile_filters) - 0)
+
+
+def test_batch_tiling_folds_images():
+    """Small layers fold whole images into one MAC+reduce tile; the fold
+    grows with the batch until the geometry cap bites."""
+    spec = _conv_spec(H=6, R=3, C=4, M=4, E=4)
+    p1 = plan_layer(spec, GEOM, batch=1)
+    p8 = plan_layer(spec, GEOM, batch=8)
+    assert p1.batch_tile == 1
+    assert p8.batch_tile == 8  # tiny layer: all 8 images in one tile
+    assert p8.tile_rows == 8 * 16
+    assert p8.total_passes == 8 * p1.total_passes
+
+
+def test_batch_tile_caps_at_geometry():
+    spec = _conv_spec(H=149, R=3, C=32, M=32, E=147)  # big: P*E*E ~ 5.5M
+    plan = plan_layer(spec, GEOM, batch=8)
+    assert plan.batch_tile == 1  # a single image already overflows a tile
+    assert plan.row_bits * plan.tile_rows * plan.tile_filters <= GEOM.compute_slots
+
+
+def test_conv_tiles_batch1_matches_legacy_semantics():
+    """At batch=1 the planner's tiles equal the pre-schedule tiler's."""
+    E = F = 12
+    tr, tf = conv_tiles(E, F, 16, 72, GEOM, batch=1)
+    assert tr == E * F and tf == 16  # fits: P(128)*144*16 < compute_slots
+    # caller overrides clamp to the work
+    tr, tf = conv_tiles(E, F, 16, 72, GEOM, batch=1, tile_pixels=10 ** 6)
+    assert tr == E * F
+
+
+def test_pool_plan_fields():
+    spec = LayerSpec("p", "maxpool", H=28, R=3, S=3, C=0, M=8, E=13, stride=2)
+    plan = plan_layer(spec, GEOM, batch=3)
+    assert plan.filter_bytes == 0 and plan.quant_passes == 0
+    assert plan.minmax_cycles == 0
+    assert plan.total_passes == 3 * plan.serial_passes
+
+
+# ---------------------------------------------------------------------------
+# NetworkSchedule: §VI-C residency + §IV-E spill, one source of truth
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def paper_specs():
+    return inception_v3_specs()
+
+
+def test_filter_bytes_loaded_once_per_layer_per_batch(paper_specs):
+    """§VI-C: filters stay resident while the batch streams — the loaded
+    bytes are independent of batch size."""
+    s1 = plan_network(paper_specs, GEOM, batch=1)
+    s64 = plan_network(paper_specs, GEOM, batch=64)
+    want = sum(s.filter_bytes for s in paper_specs)
+    assert s1.filter_bytes_loaded == s64.filter_bytes_loaded == want
+    # but the pass count does scale with the batch (layer-serial §IV-E)
+    assert s64.total_passes == 64 * s1.total_passes
+
+
+def test_spill_decision_matches_simulator_model(paper_specs):
+    sched = plan_network(paper_specs, GEOM, batch=4)
+    cap = GEOM.io_way_bytes / 2
+    for plan in sched.layers:
+        assert plan.spill_to_dram == (plan.spec.output_bytes > cap / 2)
+        if plan.spill_to_dram:
+            assert plan.spill_bytes_per_image == 2 * plan.spec.output_bytes
+    # Inception v3 spills only its earliest, widest layers (§IV-E prose:
+    # "the first five layers")
+    spilling = [p.spec.name for p in sched.layers if p.spill_to_dram]
+    assert 0 < len(spilling) <= 6
+    assert all(s in {p.spec.name for p in sched.layers[:7]} for s in spilling)
+
+
+def test_stream_batch_limit(paper_specs):
+    sched = plan_network(paper_specs, GEOM, batch=1)
+    assert sched.stream_batch_limit >= 1
+    # the widest layer dominates; a 60MB-class part streams deeper batches
+    bigger = plan_network(paper_specs, GEOM.scaled(24), batch=1)
+    assert bigger.stream_batch_limit >= sched.stream_batch_limit
+
+
+# ---------------------------------------------------------------------------
+# simulate_network consumes the schedule (no residency re-derivation)
+# ---------------------------------------------------------------------------
+def test_simulate_network_schedule_parity(paper_specs):
+    r_specs = simulate_network(paper_specs)
+    r_sched = simulate_network(plan_network(paper_specs, GEOM, batch=42))
+    assert r_sched.latency_s == pytest.approx(r_specs.latency_s, rel=1e-12)
+    assert r_sched.energy_j == pytest.approx(r_specs.energy_j, rel=1e-12)
+    assert r_sched.spill_s_per_image() == pytest.approx(
+        r_specs.spill_s_per_image(), rel=1e-12)
+    # every layer result carries the plan it priced
+    assert all(l.plan is not None for l in r_sched.layers)
+    assert r_sched.schedule.batch == 42
+    # §VI-C assert: filter bytes loaded once per layer per batch
+    assert (r_sched.filter_bytes_loaded == r_specs.filter_bytes_loaded
+            == sum(s.filter_bytes for s in paper_specs))
+    assert r_sched.filter_s == pytest.approx(r_specs.filter_s, rel=1e-12)
+
+
+def test_schedule_throughput_still_hits_paper(paper_specs):
+    r = simulate_network(plan_network(paper_specs, GEOM, batch=64))
+    assert throughput(r, 64) == pytest.approx(PAPER["nc_throughput"], rel=0.05)
+
+
+def test_schedule_lookup():
+    specs = inception_v3_specs()
+    sched = plan_network(specs, GEOM, batch=2)
+    p = sched.plan("Conv2d_2b_3x3")
+    assert isinstance(p, SlicePlan) and p.spec.name == "Conv2d_2b_3x3"
+    assert p.serial_passes == PAPER["conv2d_2b_serial"]
+    with pytest.raises(KeyError):
+        sched.plan("nope")

@@ -48,6 +48,7 @@ def test_watchdog_flags_stragglers():
     assert wd.flagged == [2]
 
 
+@pytest.mark.slow
 def test_serving_engine_completes_requests():
     from repro.launch.serve import Request, ServingEngine
     from repro.models import transformer as T
@@ -68,6 +69,7 @@ def test_serving_engine_completes_requests():
     assert eng.steps < 5 * 4
 
 
+@pytest.mark.slow
 def test_serving_matches_unbatched_decode():
     """Engine output for one request == plain prefill+decode loop."""
     from repro.launch.serve import Request, ServingEngine
