@@ -53,6 +53,14 @@ SPEEDUP_NOTES = {
     "batch4_reduced_forward": "nc_forward(batch=4) reduced_config(): "
                               "~0.4-1.0 s/img (jit default) vs ~1.8-2.0 s "
                               "at batch=1 (host) — §VI-C amortization",
+    "sparsity": "PR 4: dense-vs-sparse pair "
+                "(emulation/nc_forward_b4_pruned50_*): reduced_config at "
+                "batch 4 with the last 50% of every conv's filters zeroed; "
+                "the sparse schedule drops zero-filter passes (engine runs "
+                "live columns only, logits byte-identical — asserted) and "
+                "kernel_bench RAISES if sparse wall time exceeds dense; "
+                "full-network modeled credit at 50% pruning is ~48% of "
+                "compute cycles (sparsity/TOTAL row of sched_breakdown)",
     "host_noise": "this shared container shows >1.3x ambient cross-run "
                   "drift even at min-of-15 (PR 3: untouched ops incl. the "
                   "pure-XLA kernel/f32_dot flapped 1.3-2.7x between "

@@ -1,25 +1,29 @@
 """Figure-13-style per-layer latency breakdown FROM THE SCHEDULE, plus the
 throughput-vs-batch sweep (Figure 16 shape) validated against the paper's
-headline.
+headline, plus the dense-vs-sparse cycle breakdown of the sparsity-aware
+scheduler (fixed 50% filter pruning of the full paper network).
 
-Both tables are priced off one :class:`~repro.core.schedule.NetworkSchedule`
-— the same plan object the packed-engine emulation and the serving engine
-execute — so the breakdown columns (filter/input/output/mac/reduce/quant)
-and the batching curve cannot drift from what actually runs.  The sweep
-raises if the scaling shape breaks (non-monotone, or the plateau leaves the
-paper's 604 inf/s by more than 10%), making this module a perf-model gate,
-not just a printer."""
+All tables are priced off :class:`~repro.core.schedule.NetworkSchedule`
+objects — the same plan the packed-engine emulation and the serving engine
+execute — so the breakdown columns (filter/input/output/mac/reduce/quant),
+the batching curve and the sparse credits cannot drift from what actually
+runs.  The module raises if a shape breaks (non-monotone throughput,
+plateau off the paper's 604 inf/s by >10%, or a sparse layer whose modeled
+cycles do not drop by the skipped-pass credit exactly), making it a
+perf-model gate, not just a printer."""
 from __future__ import annotations
 
 from collections import defaultdict
 
 from benchmarks.common import row
 from repro.core.cache_geometry import XEON_E5_35MB
-from repro.core.schedule import plan_network
-from repro.core.simulator import PAPER, simulate_network, throughput
+from repro.core.schedule import plan_network, prune_occupancy
+from repro.core.simulator import (PAPER, modeled_layer_cycles,
+                                  simulate_network, throughput)
 from repro.models.inception import inception_v3_specs
 
 BATCHES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+PRUNE = 0.5  # the fixed dense-vs-sparse comparison point
 
 
 def run() -> list[str]:
@@ -68,6 +72,37 @@ def run() -> list[str]:
                     f"monotone, plateau {plateau:.1f} inf/s "
                     f"({err:.1%} vs paper), spill "
                     f"{schedule.spill_bytes_per_image / 1e6:.2f} MB/img"))
+
+    # dense-vs-sparse modeled cycles per layer: the sparsity-aware scheduler
+    # on the FULL paper network with a fixed 50% filter pruning (per-block
+    # rows; exactness asserted per layer)
+    occ = prune_occupancy(specs, PRUNE)
+    sparse = plan_network(specs, XEON_E5_35MB, batch=64, occupancy=occ)
+    per_block = defaultdict(lambda: [0.0, 0.0, 0])
+    for pd, ps in zip(schedule.layers, sparse.layers):
+        md = modeled_layer_cycles(pd)
+        ms = modeled_layer_cycles(ps)
+        if md["total_cycles"] - ms["total_cycles"] != ms["skip_credit_cycles"]:
+            raise RuntimeError(
+                f"{pd.spec.name}: sparse modeled cycles off the skipped-pass "
+                f"credit ({md['total_cycles']} - {ms['total_cycles']} != "
+                f"{ms['skip_credit_cycles']})")
+        b = per_block[pd.spec.block]
+        b[0] += md["total_cycles"]
+        b[1] += ms["total_cycles"]
+        b[2] += ms["skipped_passes"]
+    for block, (cd, cs, skipped) in per_block.items():
+        rows.append(row(f"sparsity/{block}", cd - cs,
+                        f"dense {cd:.0f} -> sparse {cs:.0f} cycles "
+                        f"({skipped} passes skipped at {PRUNE:.0%} pruning)"))
+    total_d = sum(v[0] for v in per_block.values())
+    total_s = sum(v[1] for v in per_block.values())
+    rows.append(row("sparsity/TOTAL", total_d - total_s,
+                    f"modeled cycles {total_d:.0f} -> {total_s:.0f} "
+                    f"({1 - total_s / total_d:.1%} credited), filter bytes "
+                    f"{schedule.filter_bytes_loaded / 1e6:.1f} -> "
+                    f"{sparse.filter_bytes_loaded / 1e6:.1f} MB, "
+                    f"{sparse.skipped_passes} passes/img skipped"))
     return rows
 
 

@@ -136,6 +136,7 @@ __all__ = [
     "bucket_words",
     "engine_cache_info",
     "engine_cache_clear",
+    "filter_occupancy",
     "SKIP_STATS",
 ]
 
@@ -585,23 +586,61 @@ def dot_cycles(k: int, n_bits: int, acc_bits: int) -> int:
 class SkipStats:
     """Accounting for zero-operand lane skipping (does NOT change modeled
     cycles — the SRAM clocks every bit-slice; this is emulation-side work
-    elision plus the note the cycle reports print)."""
+    elision plus the note the cycle reports print).
+
+    ``planes_*`` count multiplier bit-plane steps: a plane whose tag word
+    carries no set bit makes the tag-predicated shifted-add an identity, so
+    the host engine elides the whole step (value-sparsity at bit-plane
+    granularity — the per-plane half of the sparsity-aware scheduling; the
+    per-filter half lives in core/schedule.py, where it DOES earn modeled
+    skipped-pass credits)."""
 
     lanes_total: int = 0
     lanes_zero: int = 0  # lanes with a provably-zero operand (tag-skippable)
     words_total: int = 0
     words_skipped: int = 0  # whole 32-lane words elided by the host engine
+    planes_total: int = 0  # multiplier bit-plane steps seen by the host engine
+    planes_skipped: int = 0  # all-zero tag planes elided (step is an identity)
 
     def reset(self) -> None:
         self.lanes_total = self.lanes_zero = 0
         self.words_total = self.words_skipped = 0
+        self.planes_total = self.planes_skipped = 0
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)
 
 
 SKIP_STATS = SkipStats()
-ZERO_SKIP = True  # module switch for the host multiply's word elision
+ZERO_SKIP = True  # module switch for the host multiply's word/plane elision
+
+
+def filter_occupancy(rows, n_bits: int, zero: int = 0):
+    """Pack-time operand occupancy scan for sparsity-aware scheduling.
+
+    ``rows``: integer filter rows ``(M, K)`` (one row per filter, reduce
+    lanes last — the grid :func:`pack_values` consumes).  Returns
+    ``(zero_mask, plane_live)``:
+
+    * ``zero_mask`` ``(M,)`` bool — filters whose every weight equals
+      ``zero`` (the quantized zero point): their dot contribution is the
+      analytically-known ``zero * sum(x)``, so the scheduler can drop their
+      serialized passes entirely (core/schedule.py turns this into
+      skipped-pass cycle credits),
+    * ``plane_live`` ``(n_bits,)`` bool — bit planes carrying at least one
+      set bit across the *live* filters; dead planes make the multiplier's
+      shifted-add step an identity (see :func:`_mul_words_dense`).
+
+    Pure metadata: results/cycles of any individual op are never changed by
+    this scan — it only feeds the plan."""
+    rows = np.asarray(rows)
+    if rows.ndim != 2:
+        rows = rows.reshape(rows.shape[0], -1)
+    zero_mask = (rows == zero).all(axis=1)
+    live = rows[~zero_mask].astype(np.uint64)
+    plane_live = np.array(
+        [bool(((live >> np.uint64(p)) & 1).any()) for p in range(n_bits)])
+    return zero_mask, plane_live
 
 
 # ---------------------------------------------------------------------------
@@ -676,11 +715,22 @@ def _nonzero_word(w) -> np.ndarray:
 
 
 def _mul_words_dense(apad, bw, shape):
-    """Tag-predicated shifted-add multiply on (broadcastable) word arrays."""
+    """Tag-predicated shifted-add multiply on (broadcastable) word arrays.
+
+    A multiplier plane whose tag word has no set bit makes every lane's
+    predicated write a no-op, so the whole shifted-add step is elided on the
+    host path (``SKIP_STATS.planes_skipped``) — the per-plane face of value
+    sparsity (a pruned filter's dead bit planes never clock the adder).
+    Results are bit-identical; modeled cycles are charged by the caller's
+    unchanged formula."""
     total, nb = apad.shape[0], bw.shape[0]
     prod = np.zeros((total,) + shape, np.uint32)
+    SKIP_STATS.planes_total += nb
     for j in range(nb):
         tag = bw[j]
+        if ZERO_SKIP and not tag.any():
+            SKIP_STATS.planes_skipped += 1
+            continue
         ntag = ~tag
         shifted = np.roll(apad, j, axis=0)
         carry = np.zeros(shape, np.uint32)

@@ -24,7 +24,8 @@ from typing import Iterable, Literal
 
 from repro.core.cache_geometry import CacheGeometry, XEON_E5_35MB
 
-__all__ = ["LayerSpec", "MappedLayer", "map_layer", "map_network"]
+__all__ = ["LayerSpec", "MappedLayer", "map_layer", "map_network",
+           "serial_passes_for"]
 
 MAX_FILTER_BYTES_PER_LINE = 9  # filter splitting threshold (§IV-A)
 MAX_PACK_BYTES = 16  # 1x1 filter packing factor (§IV-A)
@@ -79,6 +80,19 @@ def _next_pow2(x: int) -> int:
     return 1 << max(0, (x - 1).bit_length())
 
 
+def serial_passes_for(work: int, parallel: int) -> int:
+    """Serialized passes to cover ``work`` convolutions/windows at
+    ``parallel`` per pass (§IV-B) — 0 when there is no work at all.
+
+    The ONE serialization rule shared by :func:`map_layer` (dense pass
+    counts) and core/schedule.py's sparsity-aware planner (pass counts over
+    the pruned filter set), so mapper and scheduler can never disagree on
+    how work rounds up into passes."""
+    if work <= 0:
+        return 0
+    return max(1, math.ceil(work / max(parallel, 1)))
+
+
 @dataclasses.dataclass(frozen=True)
 class MappedLayer:
     spec: LayerSpec
@@ -111,7 +125,7 @@ def map_layer(spec: LayerSpec, geom: CacheGeometry = XEON_E5_35MB) -> MappedLaye
         c_round = min(_next_pow2(max(spec.filter_elems, 1)), MAX_REDUCE_LINES)
         per_array = max(geom.array_cols // c_round, 1)
         parallel = geom.compute_arrays * per_array
-        serial = max(1, math.ceil(work / parallel)) if work else 1
+        serial = serial_passes_for(work, parallel) if work else 1
         util = work / (serial * parallel) if work else 0.0
         return MappedLayer(
             spec, 1, 1, spec.filter_elems, spec.C or spec.M, c_round,
@@ -147,7 +161,8 @@ def map_layer(spec: LayerSpec, geom: CacheGeometry = XEON_E5_35MB) -> MappedLaye
         per_array = geom.array_cols / c_round  # 0.5
 
     parallel = int(geom.compute_arrays * per_array)
-    serial = max(1, math.ceil(spec.conv_count / parallel))
+    # degenerate specs (conv_count == 0) still map to one idle pass
+    serial = serial_passes_for(spec.conv_count, parallel) or 1
     util = spec.conv_count / (serial * parallel)
     return MappedLayer(
         spec, split, pack, line_bytes, eff_c, c_round,

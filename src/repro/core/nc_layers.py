@@ -78,7 +78,9 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class ConvStats:
-    """Per-layer emulation accounting notes (cycles stay formula-exact)."""
+    """Per-layer emulation accounting notes (cycles stay formula-exact for
+    the passes that RUN; sparse plans drop zero-filter passes and their
+    §III charges with them)."""
 
     lanes: int  # B*E*F*M*K MAC lanes
     zero_operand_lanes: int  # lanes a tag latch could predicate off (EIE-style)
@@ -90,6 +92,8 @@ class ConvStats:
     engine_words_skipped: int  # word columns elided (all-zero operand)
     batch: int = 1  # images folded into the lane axis this call
     filter_loads: int = 1  # times the filter word grid was packed (§VI-C: 1/batch)
+    zero_filters: int = 0  # all-zero filters the sparse plan pruned
+    skipped_passes: int = 0  # serialized passes the plan dropped (per image)
 
 
 def nc_dot(x_q, w_q, acc_bits: int = 24, n_bits: int = 8):
@@ -226,6 +230,7 @@ def nc_conv2d(
     geom: CacheGeometry = XEON_E5_35MB,
     layer_spec: LayerSpec | None = None,
     plan: sched.SlicePlan | None = None,
+    occupancy: sched.LayerOccupancy | str | None = None,
     engine: str = "host",
     return_stats: bool = False,
 ):
@@ -258,6 +263,18 @@ def nc_conv2d(
     (tiles are padded to a uniform shape so one executable serves the
     whole layer); ``return_stats=True`` appends a :class:`ConvStats` with
     the EIE-style zero-operand skip counts.
+
+    Sparsity-aware execution: a plan carrying a
+    :class:`~repro.core.schedule.LayerOccupancy` executes the PRUNED pass
+    list — only live filter columns run through the packed engine, while
+    the outputs of all-zero filters are filled from the exact affine
+    identity ``zw * sum(x)`` (bit-identical to computing them; the cycle
+    charge follows the executed lanes).  ``occupancy="detect"`` scans the
+    quantized filter rows at pack time (``bitserial.filter_occupancy``)
+    and plans sparse; an explicit :class:`LayerOccupancy` is validated
+    against the actual weights (a filter it marks zero must BE zero —
+    under-claiming sparsity is allowed, over-claiming raises).  Dense
+    plans (no occupancy) behave exactly as before.
     """
     xin = np.asarray(x)
     batched = xin.ndim == 4
@@ -288,22 +305,61 @@ def nc_conv2d(
     acc_bits = 32
 
     # scheduler contract: the plan carries the mapper layout (word-line
-    # budget already enforced) and the geometry-bounded tile sizes.
+    # budget already enforced), the geometry-bounded tile sizes and the
+    # value-sparsity occupancy (the pruned pass list executed below).
     spec = layer_spec or LayerSpec(
         name="nc_conv2d", kind="conv", H=H, R=R, S=S, C=Cw, M=M, E=E,
         stride=stride)
-    if plan is None or tile_pixels is not None or tile_filters is not None:
-        plan = sched.plan_layer(spec, geom, batch=B, tile_pixels=tile_pixels,
-                                tile_filters=tile_filters)
     rows_total = B * E * F
-    tile_rows = max(1, min(plan.tile_rows, rows_total))
-    tile_filters = max(1, min(plan.tile_filters, M))
-
     win_flat = win.reshape(rows_total, K).astype(np.uint8 if n_bits <= 8
                                                  else np.uint32)
     w_rows = wq.reshape(K, M).T.astype(np.uint8 if n_bits <= 8 else np.uint32)
+    zw_int = int(w_qp.zero_point)
+    replan = plan is None or tile_pixels is not None or tile_filters is not None
+    if occupancy is not None and not replan:
+        raise ValueError("pass sparsity through the plan's occupancy, or "
+                         "let nc_conv2d plan (occupancy= with an explicit "
+                         "plan is ambiguous)")
+    if replan:
+        occ = occupancy
+        if isinstance(occ, str):
+            if occ != "detect":
+                raise ValueError(f"occupancy must be a LayerOccupancy, "
+                                 f"'detect' or None, got {occ!r}")
+            occ = sched.LayerOccupancy.from_filter_rows(
+                w_rows, w_qp.bits, zw_int)
+        if occ is None and plan is not None:
+            occ = plan.occupancy  # tile overrides must not drop sparsity
+        plan = sched.plan_layer(spec, geom, batch=B, tile_pixels=tile_pixels,
+                                tile_filters=tile_filters, occupancy=occ)
+    tile_rows = max(1, min(plan.tile_rows, rows_total))
+    tile_filters = max(1, min(plan.tile_filters, M))
+
+    # sparse plans prune all-zero filters out of the engine's filter axis;
+    # an over-claiming occupancy (marking a live filter zero) would corrupt
+    # results, so it is validated against the actual quantized weights here
+    occ = plan.occupancy
+    if occ is not None and occ.zero_filters:
+        if occ.total_filters != M:
+            raise ValueError(f"{spec.name}: occupancy covers "
+                             f"{occ.total_filters} filters, layer has {M}")
+        zero_idx = np.asarray(occ.zero_filters, np.int64)
+        not_zero = ~(w_rows[zero_idx] == zw_int).all(axis=1)
+        if not_zero.any():
+            raise ValueError(
+                f"{spec.name}: occupancy marks filters "
+                f"{zero_idx[not_zero].tolist()} as zero but their weights "
+                f"are live (stale plan?)")
+        zero_mask = np.zeros(M, bool)
+        zero_mask[zero_idx] = True
+        live_idx = np.flatnonzero(~zero_mask)
+    else:
+        zero_mask = live_idx = None
+
+    w_rows_live = w_rows if live_idx is None else w_rows[live_idx]
+    M_live = w_rows_live.shape[0]
     # filters packed once per layer per batch; tiles slice the word grid
-    ww_all = _pack_w_rows(w_rows, w_qp.bits)
+    ww_all = _pack_w_rows(w_rows_live, w_qp.bits) if M_live else None
 
     skip0_words = bs.SKIP_STATS.words_total
     skip0_skipped = bs.SKIP_STATS.words_skipped
@@ -315,14 +371,14 @@ def nc_conv2d(
     # (and any other layer landing on the same bucket)
     bt = bs.bucket_words(tile_rows) if engine == "jit" else tile_rows
     bf = bs.bucket_words(tile_filters) if engine == "jit" else None
-    for p0 in range(0, rows_total, tile_rows):
+    for p0 in range(0, rows_total if M_live else 0, tile_rows):
         p1 = min(p0 + tile_rows, rows_total)
         rows = win_flat[p0:p1]
         if engine == "jit" and rows.shape[0] < bt:
             rows = np.pad(rows, ((0, bt - rows.shape[0]), (0, 0)))
         xw = _pack_x_rows(rows, x_qps[0].bits)
-        for m0 in range(0, M, tile_filters):
-            m1 = min(m0 + tile_filters, M)
+        for m0 in range(0, M_live, tile_filters):
+            m1 = min(m0 + tile_filters, M_live)
             ww = ww_all[:, m0:m1]
             if engine == "jit" and m1 - m0 < bf:
                 pad = ((0, 0), (0, bf - (m1 - m0))) + ((0, 0),) * (ww.ndim - 2)
@@ -330,9 +386,16 @@ def nc_conv2d(
             vals, _ = bs.packed_dot_words(xw, ww, K=K, acc_bits=acc_bits,
                                           engine=engine)
             vals = np.asarray(vals)  # (Mt, T[, expanded rows])
-            out[p0:p1, m0:m1] = vals[: m1 - m0, : p1 - p0].T
+            sel = (slice(m0, m1) if live_idx is None
+                   else live_idx[m0:m1])
+            out[p0:p1, sel] = vals[: m1 - m0, : p1 - p0].T
             n_tiles += 1
-    total_cycles = per_dot * rows_total * M  # one dot per (b,e,f,m)
+    if zero_mask is not None:
+        # pruned passes: an all-zero filter's dot is the affine constant
+        # zw * sum_k(x_k) — exact, no engine lanes clocked for it
+        row_sums = win_flat.sum(axis=1, dtype=np.int64)
+        out[:, zero_mask] = zw_int * row_sums[:, None]
+    total_cycles = per_dot * rows_total * M_live  # one dot per live (b,e,f,m)
 
     # affine-zero-point correction (done by the accumulating requant step
     # in-cache; exact integer identity — zero points are per image)
@@ -363,6 +426,8 @@ def nc_conv2d(
         engine_words_skipped=bs.SKIP_STATS.words_skipped - skip0_skipped,
         batch=B,
         filter_loads=1,
+        zero_filters=M - M_live,
+        skipped_passes=plan.skipped_passes,
     )
     return result, total_cycles, stats
 

@@ -33,12 +33,51 @@ reduction stays in-cache (§IV-D).  This module turns the mapper's layout
 * :class:`NetworkSchedule` — the per-layer plans for a whole network at one
   batch size, with the aggregate residency/spill accounting.
 
+Sparsity-aware scheduling (occupancy metadata + skip credits)
+-------------------------------------------------------------
+Value sparsity is a first-class *input* to the plan, not an opportunistic
+engine trick.  A :class:`LayerOccupancy` carries what the pack-time scan
+(:func:`bitserial.filter_occupancy`, run over the quantized filter rows)
+detected, plus a ReLU-chain activation-sparsity estimate threaded from the
+model definition (models/inception.py):
+
+* ``zero_filters`` — filters whose every quantized weight equals the zero
+  point.  Their dequantized value is exactly 0, so their whole serialized
+  passes carry no information: :func:`plan_layer` re-runs the mapper's ONE
+  serialization rule (``mapper.serial_passes_for``) over the *live* conv
+  count and records the difference as ``SlicePlan.skipped_passes`` — the
+  skipped-pass cycle credit the simulator prices (per-pass cycles x
+  skipped passes, exactly) and the packed engine executes (the pruned pass
+  list: zero-filter outputs are filled from the affine identity
+  ``zw * sum(x)``, bit-identical to computing them).  Pruned filters are
+  also not loaded: ``filter_bytes`` shrinks to the live set (§VI-C
+  residency of an EIE-style pruned network).
+* ``dead_planes`` — filter bit planes with no set bit; the host multiply
+  elides those shifted-add steps (bitserial ``SKIP_STATS.planes_skipped``)
+  with results unchanged.  Advisory for the model: per-plane elision never
+  changes modeled cycles (the SRAM clocks every bit-slice of the passes it
+  *does* run).
+* ``activation_sparsity`` — the estimated fraction of exactly-zero input
+  activations (ReLU chains make post-activation zeros exact in the uint8
+  resident format).  An estimate can never earn an exact cycle credit, so
+  it stays advisory: it sizes the EIE-style zero-operand word elision the
+  host engine already performs and is reported alongside the measured
+  zero-lane counts.
+
+Only the deterministic filter occupancy changes numbers, and only when
+present: ``occupancy=None`` (or zero detected sparsity) plans are
+field-for-field identical to dense plans, and the simulator's dense
+outputs stay bit-identical.  ``stream_batch_limit`` is intentionally
+pruning-independent (activations stream at full width either way).
+
 Consumers (the "one source of truth" contract):
 
 * core/nc_layers.py tiles its packed MAC+reduce work with the plan's
-  ``tile_rows``/``tile_filters`` (batch folded into the packed lane axis),
+  ``tile_rows``/``tile_filters`` (batch folded into the packed lane axis)
+  and executes only the plan's live filter columns,
 * core/simulator.py prices the SAME plan instead of re-deriving residency,
-  so modeled and emulated cycles agree on the layout by construction,
+  so modeled and emulated cycles agree on the layout by construction
+  (skipped-pass credits included),
 * models/inception.py executes the schedule end to end (``nc_forward``),
 * launch/serve.py admits request batches sized to the schedule.
 """
@@ -46,15 +85,17 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Iterable, Sequence
+from typing import Iterable, Mapping, Sequence
+
+import numpy as np
 
 from repro.core import bitserial as bs
 from repro.core.cache_geometry import CacheGeometry, XEON_E5_35MB
 from repro.core.mapper import (LayerSpec, MappedLayer, check_wordline_budget,
-                               map_layer)
+                               map_layer, serial_passes_for)
 
-__all__ = ["SlicePlan", "NetworkSchedule", "conv_tiles", "plan_layer",
-           "plan_network"]
+__all__ = ["LayerOccupancy", "SlicePlan", "NetworkSchedule", "conv_tiles",
+           "plan_layer", "plan_network", "prune_occupancy"]
 
 ACC_BITS = 32  # reserved-way staging width of a conv partial sum
 
@@ -96,6 +137,58 @@ def conv_tiles(E: int, F: int, M: int, K: int,
 
 
 @dataclasses.dataclass(frozen=True)
+class LayerOccupancy:
+    """Per-layer value-sparsity metadata (see the module docstring).
+
+    ``zero_filters`` holds the sorted indices of filters whose every
+    quantized weight equals the zero point — the deterministic sparsity
+    that earns skipped-pass credits.  ``dead_planes``/``plane_bits`` and
+    ``activation_sparsity`` are advisory (engine-side elision and
+    reporting only)."""
+
+    total_filters: int
+    zero_filters: tuple[int, ...] = ()
+    plane_bits: int = 8
+    dead_planes: int = 0
+    activation_sparsity: float = 0.0  # est. zero fraction of INPUT lanes
+
+    def __post_init__(self):
+        zf = tuple(sorted(int(i) for i in set(self.zero_filters)))
+        object.__setattr__(self, "zero_filters", zf)
+        if zf and not (0 <= zf[0] and zf[-1] < self.total_filters):
+            raise ValueError(
+                f"zero filter indices {zf[0]}..{zf[-1]} out of range for "
+                f"{self.total_filters} filters")
+
+    @property
+    def n_zero(self) -> int:
+        return len(self.zero_filters)
+
+    @property
+    def n_live(self) -> int:
+        return self.total_filters - self.n_zero
+
+    @property
+    def zero_fraction(self) -> float:
+        return self.n_zero / max(self.total_filters, 1)
+
+    @classmethod
+    def from_filter_rows(cls, rows, n_bits: int, zero_point: int = 0,
+                         activation_sparsity: float = 0.0) -> "LayerOccupancy":
+        """Build from quantized filter rows ``(M, K)`` via the pack-time
+        scan (:func:`bitserial.filter_occupancy`)."""
+        rows = np.asarray(rows)
+        zero_mask, plane_live = bs.filter_occupancy(rows, n_bits, zero_point)
+        return cls(
+            total_filters=int(rows.shape[0]),
+            zero_filters=tuple(int(i) for i in np.flatnonzero(zero_mask)),
+            plane_bits=int(n_bits),
+            dead_planes=int((~plane_live).sum()),
+            activation_sparsity=float(activation_sparsity),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
 class SlicePlan:
     """One layer's execution plan (see the module docstring field map)."""
 
@@ -120,10 +213,20 @@ class SlicePlan:
     # §IV-D in-cache quantization
     quant_passes: int  # lockstep requant passes per image
     minmax_cycles: int  # in-cache min/max log tree per image
+    # value sparsity (see "Sparsity-aware scheduling" in the module docs);
+    # occupancy=None <=> dense plan, numbers above untouched
+    occupancy: LayerOccupancy | None = None
+    skipped_passes: int = 0  # serialized passes dropped (zero filters), /image
 
     @property
     def is_compute(self) -> bool:
         return self.spec.kind in ("conv", "fc")
+
+    @property
+    def executed_passes(self) -> int:
+        """Serialized passes the engine actually runs per image: the dense
+        §IV-B count minus the skipped-pass credit."""
+        return self.serial_passes - self.skipped_passes
 
 
 def plan_layer(spec: LayerSpec,
@@ -131,10 +234,18 @@ def plan_layer(spec: LayerSpec,
                batch: int = 1,
                *,
                tile_pixels: int | None = None,
-               tile_filters: int | None = None) -> SlicePlan:
-    """Map one layer (§IV-A/B) and schedule it for ``batch`` images."""
+               tile_filters: int | None = None,
+               occupancy: LayerOccupancy | None = None) -> SlicePlan:
+    """Map one layer (§IV-A/B) and schedule it for ``batch`` images.
+
+    ``occupancy`` makes value sparsity an input to the plan: passes whose
+    filters are all zero are dropped (``skipped_passes``, priced as an
+    exact cycle credit by the simulator) and pruned filters are not loaded
+    (``filter_bytes`` shrinks to the live set).  ``occupancy=None`` plans
+    are field-for-field identical to the dense plan."""
     mapped = map_layer(spec, geom)
     E = F = spec.E
+    skipped = 0
     if spec.kind in ("conv", "fc"):
         check_wordline_budget(mapped, geom)
         K = spec.R * spec.S * spec.C
@@ -147,6 +258,18 @@ def plan_layer(spec: LayerSpec,
         filter_bytes = spec.filter_bytes
         quant_passes = math.ceil(spec.output_bytes / geom.compute_slots)
         minmax = bs.minmax_cycles(spec.output_bytes, ACC_BITS)
+        if occupancy is not None:
+            if occupancy.total_filters != spec.M:
+                raise ValueError(
+                    f"{spec.name}: occupancy covers {occupancy.total_filters} "
+                    f"filters, layer has {spec.M}")
+            # the mapper's ONE serialization rule over the LIVE conv count:
+            # zero filters contribute no serialized work (their outputs are
+            # the analytically-known affine constant)
+            live_passes = serial_passes_for(
+                occupancy.n_live * E * F, mapped.parallel_convs)
+            skipped = mapped.serial_passes - live_passes
+            filter_bytes = spec.R * spec.S * spec.C * occupancy.n_live
     else:  # pooling: no filters, no requantization — comparisons in place
         K = spec.filter_elems
         tr, tf = batch * E * F, 1
@@ -173,6 +296,8 @@ def plan_layer(spec: LayerSpec,
         spill_bytes_per_image=2 * spec.output_bytes if spill else 0,
         quant_passes=quant_passes,
         minmax_cycles=minmax,
+        occupancy=occupancy,
+        skipped_passes=skipped,
     )
 
 
@@ -206,10 +331,18 @@ class NetworkSchedule:
         return sum(p.total_passes for p in self.layers)
 
     @property
+    def skipped_passes(self) -> int:
+        """Per-image serialized passes dropped by value sparsity, summed
+        over layers (the network's skipped-pass credit)."""
+        return sum(p.skipped_passes for p in self.layers)
+
+    @property
     def stream_batch_limit(self) -> int:
         """Images the reserved I/O way can stage at once for the widest
         layer (inputs + outputs share the way) — the §VI-C streaming
-        bound; batches beyond it spill (see ``spill_to_dram``)."""
+        bound; batches beyond it spill (see ``spill_to_dram``).  By
+        construction independent of pruning: activations stream at full
+        width whether or not filters are zero."""
         widest = max(p.input_bytes_per_image + p.output_bytes_per_image
                      for p in self.layers)
         return max(1, self.geom.io_way_bytes // widest)
@@ -217,6 +350,34 @@ class NetworkSchedule:
 
 def plan_network(specs: Sequence[LayerSpec] | Iterable[LayerSpec],
                  geom: CacheGeometry = XEON_E5_35MB,
-                 batch: int = 1) -> NetworkSchedule:
+                 batch: int = 1,
+                 occupancy: Mapping[str, LayerOccupancy] | None = None,
+                 ) -> NetworkSchedule:
+    """Plan a network.  ``occupancy`` maps layer names to their
+    :class:`LayerOccupancy` (layers absent from the map plan dense)."""
+    occupancy = occupancy or {}
     return NetworkSchedule(
-        tuple(plan_layer(s, geom, batch) for s in specs), geom, batch)
+        tuple(plan_layer(s, geom, batch, occupancy=occupancy.get(s.name))
+              for s in specs), geom, batch)
+
+
+def prune_occupancy(specs: Iterable[LayerSpec], fraction: float = 0.5,
+                    plane_bits: int = 8) -> dict[str, LayerOccupancy]:
+    """Spec-driven fixed pruning: mark the LAST ``round(M * fraction)``
+    filters of every conv/fc layer as zero.
+
+    The deterministic counterpart of actually zeroing weights
+    (models/inception.prune_wpack uses the same last-k rule, so a plan
+    built here matches the engine's pack-time detection on the pruned
+    weights).  Used by the golden cycle-model regression and the
+    dense-vs-sparse benchmarks — no weight tensors needed: skipped-pass
+    credits depend only on the zero-filter COUNT."""
+    occ = {}
+    for s in specs:
+        if s.kind not in ("conv", "fc"):
+            continue
+        k = int(round(s.M * fraction))
+        occ[s.name] = LayerOccupancy(
+            total_filters=s.M, zero_filters=tuple(range(s.M - k, s.M)),
+            plane_bits=plane_bits)
+    return occ

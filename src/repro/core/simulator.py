@@ -189,8 +189,12 @@ def simulate_layer(
     red_cycles = const.reduce_step_cycles * steps + const.reduce_xstep_cycles * max(steps - 5, 0)
     per_conv = mac_cycles + red_cycles
 
-    mac_s = plan.serial_passes * (mac_cycles + const.pass_stage_cycles) / f_hz
-    reduce_s = plan.serial_passes * red_cycles / f_hz
+    # sparsity-aware: the plan may have dropped serialized passes whose
+    # filters are all zero (plan.skipped_passes); dense plans price the
+    # identical expression with a zero credit — bit-identical numbers.
+    passes = plan.executed_passes
+    mac_s = passes * (mac_cycles + const.pass_stage_cycles) / f_hz
+    reduce_s = passes * red_cycles / f_hz
 
     # requantization (+folded BN) applies to output elements in lockstep
     # across lanes: once per lane-full of outputs (the plan's quant
@@ -207,7 +211,7 @@ def simulate_layer(
     input_s = input_stream / const.input_bw
     output_s = spec.output_bytes / const.output_bw
 
-    compute_cycles = plan.serial_passes * (per_conv + const.pass_stage_cycles) + quant_s * f_hz
+    compute_cycles = passes * (per_conv + const.pass_stage_cycles) + quant_s * f_hz
     active = geom.compute_arrays * m.utilization
     energy = (
         compute_cycles * active * geom.compute_energy_pj * 1e-12
@@ -219,7 +223,7 @@ def simulate_layer(
 
 
 def modeled_layer_cycles(
-    spec: LayerSpec,
+    spec: LayerSpec | SlicePlan,
     geom: CacheGeometry = XEON_E5_35MB,
     const: SimConstants = SimConstants(),
 ) -> dict:
@@ -230,14 +234,23 @@ def modeled_layer_cycles(
     count (core/nc_layers.py): the emulation charges the §III formulas per
     lane group, the model charges the calibrated per-pass constants per
     serialized pass — models/inception.py's ``nc_forward`` reports both
-    side by side."""
+    side by side.
+
+    Accepts a :class:`SlicePlan` for sparse plans: ``total_cycles`` then
+    covers only the executed passes and ``skip_credit_cycles`` is the
+    exact credit — ``dense_total - sparse_total == skip_credit_cycles``
+    holds to the cycle (same per-pass cost, the occupancy never changes
+    the mapped layout)."""
     res = simulate_layer(spec, geom, const)
     per_pass = res.compute_cycles_per_pass
     passes = res.mapped.serial_passes
+    skipped = res.plan.skipped_passes if res.plan is not None else 0
     return dict(
         per_pass_cycles=per_pass,
         serial_passes=passes,
-        total_cycles=per_pass * passes,
+        skipped_passes=skipped,
+        skip_credit_cycles=per_pass * skipped,
+        total_cycles=per_pass * (passes - skipped),
         compute_s=res.compute_s,
         total_s=res.total_s,
     )

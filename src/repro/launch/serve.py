@@ -164,10 +164,17 @@ class NCServingEngine(BatchQueueEngine):
     :class:`~repro.core.schedule.NetworkSchedule` planned once per batch
     size (ragged final batches plan-and-cache their own), so the mapper,
     the packed engine and the server all execute the same plan object.
+
+    ``sparse=True`` (the default) plans against the deployed weights'
+    detected value sparsity (``inception.network_occupancy``): serialized
+    passes of all-zero (pruned) filters are dropped from every batch's
+    schedule, with logits byte-identical to dense execution — a deployment
+    serving an EIE-style pruned model gets the cycle and wall-time win for
+    free.  Unpruned weights detect zero sparsity and plan exactly dense.
     """
 
     def __init__(self, params, config=None, *, max_batch: int = 4,
-                 geom=None, engine: str | None = None):
+                 geom=None, engine: str | None = None, sparse: bool = True):
         from repro.core import schedule as nc_schedule
         from repro.core.cache_geometry import XEON_E5_35MB
         from repro.models import inception
@@ -181,17 +188,22 @@ class NCServingEngine(BatchQueueEngine):
         self.geom = geom or XEON_E5_35MB
         self.engine = engine
         self.specs = inception.inception_v3_specs(self.config)
-        self.schedule = self._plan_network(self.specs, self.geom,
-                                           batch=max_batch)
-        self._schedules = {max_batch: self.schedule}
-        # resident filters quantize ONCE per deployment, not once per batch
+        # resident filters quantize ONCE per deployment, not once per batch;
+        # the occupancy scan runs on the same resident weights
         self.wpack = inception.prepare_conv_weights(params, self.config)
+        self.occupancy = (inception.network_occupancy(self.wpack, self.config)
+                          if sparse else None)
+        self.schedule = self._plan_network(self.specs, self.geom,
+                                           batch=max_batch,
+                                           occupancy=self.occupancy)
+        self._schedules = {max_batch: self.schedule}
         self.reports = []
 
     def _schedule_for(self, n: int):
         if n not in self._schedules:
             self._schedules[n] = self._plan_network(self.specs, self.geom,
-                                                    batch=n)
+                                                    batch=n,
+                                                    occupancy=self.occupancy)
         return self._schedules[n]
 
     def step(self) -> bool:

@@ -400,6 +400,8 @@ class NCLayerReport:
     batch: int = 1  # images folded into the packed lane axis
     minmax_cycles: int = 0  # §IV-D in-cache min/max tree (inside emulated)
     filter_loads: int = 0  # filter packs this batch (§VI-C residency: 1)
+    skipped_passes: int = 0  # zero-filter passes the sparse plan dropped
+    zero_filters: int = 0  # pruned filters the engine never ran
 
 
 @dataclasses.dataclass(frozen=True)
@@ -425,6 +427,10 @@ class NCForwardReport:
     def total_zero_operand_lanes(self) -> int:
         return sum(l.zero_operand_lanes for l in self.layers)
 
+    @property
+    def total_skipped_passes(self) -> int:
+        return sum(l.skipped_passes for l in self.layers)
+
     def summary(self) -> str:
         """Paper-style per-layer cycle table (Figure 13 analogue)."""
         lines = [f"# {self.config_name}: per-layer cycles "
@@ -441,6 +447,9 @@ class NCForwardReport:
             f"{self.total_modeled_cycles:14.0f} {'':7s} "
             f"{self.total_zero_operand_lanes:11d}")
         lines.append(f"# modeled latency {self.total_modeled_s * 1e3:.3f} ms")
+        if self.total_skipped_passes:
+            lines.append(f"# sparse schedule: {self.total_skipped_passes} "
+                         f"zero-filter passes skipped per image")
         return "\n".join(lines)
 
 
@@ -464,6 +473,95 @@ def prepare_conv_weights(params: dict, config: InceptionConfig) -> dict:
         wq = nc._quantize_np(wf, w_qp).astype(np.uint8)
         packed[name] = (wq, w_qp, np.asarray(p["bias"], np.float32))
     return packed
+
+
+# ---------------------------------------------------------------------------
+# Value sparsity: occupancy metadata for the sparsity-aware scheduler.
+# Filter occupancy is DETECTED from the quantized weights (deterministic —
+# it earns exact skipped-pass credits); activation sparsity is an ESTIMATE
+# threaded from the network structure (every conv output passes ReLU, so
+# post-activation zeros are exact zeros in the uint8 resident format) and
+# stays advisory: it sizes the EIE-style zero-operand word elision and the
+# reports, never a cycle credit.
+# ---------------------------------------------------------------------------
+RELU_ZERO_FRACTION = 0.5  # prior for post-ReLU zeros (symmetric preactivation)
+
+
+def _op_act_est(name, op, p_in, est):
+    """Walk one op: record the conv's INPUT sparsity estimate, return the
+    output estimate.  Pool zeros survive only when a whole window is zero
+    (non-negative resident activations), so pools raise p to the window
+    population; branch concats average their branches (an estimate — the
+    channel weighting is not worth modeling)."""
+    if op[0] == "conv":
+        est[name] = p_in
+        return RELU_ZERO_FRACTION
+    if op[0] in ("maxpool", "avgpool"):
+        _, r, stride, pad = op
+        return float(p_in) ** (r * r)
+    if op[0] == "split":
+        outs = []
+        for i, sub in enumerate(op[1:]):
+            p = p_in
+            for j, sop in enumerate(sub):
+                p = _op_act_est(f"{name}_s{i}_{j}", sop, p, est)
+            outs.append(p)
+        return sum(outs) / len(outs)
+    raise ValueError(op)
+
+
+def activation_sparsity_estimates(config: InceptionConfig = REDUCED) -> dict:
+    """ReLU-chain activation-sparsity estimates: for every conv/fc layer,
+    the estimated fraction of exactly-zero INPUT activations (what the
+    host engine's zero-operand word skipping can elide).  The input image
+    is dense (0.0); the FC input comes through the global average pool, so
+    it is effectively dense again."""
+    est: dict[str, float] = {}
+    p = 0.0  # raw image pixels
+    for name, op in config.stem:
+        p = _op_act_est(name, op, p, est)
+    for bname, branches in config.mixed:
+        outs = []
+        for bi, branch in enumerate(branches):
+            pb = p
+            for oi, op in enumerate(branch):
+                pb = _op_act_est(f"{bname}_b{bi}_{oi}", op, pb, est)
+            outs.append(pb)
+        p = sum(outs) / len(outs)
+    est["FullyConnected"] = 0.0  # global avg of non-negative values
+    return est
+
+
+def network_occupancy(wpack: dict, config: InceptionConfig = REDUCED) -> dict:
+    """Per-layer :class:`~repro.core.schedule.LayerOccupancy` from the
+    quantized resident weights (:func:`prepare_conv_weights` output):
+    zero-filter/dead-plane detection via the pack-time scan, with the
+    ReLU-chain activation estimates threaded in.  Feed the result to
+    ``plan_network(..., occupancy=...)`` to plan the pruned pass list."""
+    est = activation_sparsity_estimates(config)
+    occ = {}
+    for name, r, s, c, m in _iter_convs(config):
+        wq, w_qp, _ = wpack[name]
+        rows = np.asarray(wq, np.int64).reshape(r * s * c, m).T
+        occ[name] = sched.LayerOccupancy.from_filter_rows(
+            rows, w_qp.bits, int(w_qp.zero_point),
+            activation_sparsity=est.get(name, 0.0))
+    return occ
+
+
+def prune_wpack(wpack: dict, fraction: float = 0.5) -> dict:
+    """Fixed filter pruning for the dense-vs-sparse gates: zero out (set to
+    the quantized zero point) the LAST ``round(M * fraction)`` filters of
+    every conv — the same last-k rule as ``schedule.prune_occupancy``, so
+    a spec-driven plan matches what detection finds on these weights."""
+    pruned = {}
+    for name, (wq, w_qp, bias) in wpack.items():
+        wq = np.array(wq, copy=True)
+        k = int(round(wq.shape[-1] * fraction))
+        if k:
+            wq[..., wq.shape[-1] - k:] = int(w_qp.zero_point)
+        pruned[name] = (wq, w_qp, bias)
+    return pruned
 
 
 def _requant_image(acc_b: np.ndarray, real_multiplier: float,
@@ -506,13 +604,15 @@ def _nc_run_conv(name, actq, act_qps, op, wpack, spec, plan, geom, const,
                                int(qp.zero_point))
         out_qps.append(qp)
     cycles += B * plan.quant_passes * _REQUANT_PASS_CYCLES
-    modeled = sim.modeled_layer_cycles(spec, geom, const)
+    modeled = sim.modeled_layer_cycles(plan, geom, const)
     records.append(NCLayerReport(
         name=name, kind="conv", out_shape=tuple(yq.shape),
         emulated_cycles=int(cycles), modeled_cycles=modeled["total_cycles"],
         serial_passes=modeled["serial_passes"], modeled_s=modeled["total_s"],
         lanes=stats.lanes, zero_operand_lanes=stats.zero_operand_lanes,
-        batch=B, minmax_cycles=int(c_mm), filter_loads=stats.filter_loads))
+        batch=B, minmax_cycles=int(c_mm), filter_loads=stats.filter_loads,
+        skipped_passes=modeled["skipped_passes"],
+        zero_filters=stats.zero_filters))
     return yq, out_qps
 
 
@@ -523,7 +623,7 @@ def _nc_run_pool(name, actq, act_qps, op, spec, geom, const, records):
     else:
         out_q, cycles = nc.nc_avgpool2d(actq, r, stride, padding=pad)
     out_q = np.asarray(out_q, np.uint8)
-    modeled = sim.modeled_layer_cycles(spec, geom, const)
+    modeled = sim.modeled_layer_cycles(spec, geom, const)  # pools never skip
     records.append(NCLayerReport(
         name=name, kind=kind, out_shape=tuple(out_q.shape),
         emulated_cycles=int(cycles), modeled_cycles=modeled["total_cycles"],
@@ -584,7 +684,8 @@ def nc_forward(params: dict, x: jax.Array,
                const: sim.SimConstants = sim.SimConstants(),
                engine: str | None = None,
                schedule: sched.NetworkSchedule | None = None,
-               wpack: dict | None = None):
+               wpack: dict | None = None,
+               sparse: bool = False):
     """Quantized Inception forward pass through the bit-serial emulation.
 
     x: [H, W, 3] or batched [B, H, W, 3] float32 in [0, 1].  Every conv,
@@ -608,6 +709,14 @@ def nc_forward(params: dict, x: jax.Array,
     output of :func:`prepare_conv_weights` so resident filters quantize
     once per deployment instead of once per call.
 
+    ``sparse=True`` plans against the weights' detected value sparsity
+    (:func:`network_occupancy`): zero-filter passes are dropped from the
+    executed pass list and credited in the modeled cycles, with outputs
+    BYTE-IDENTICAL to the dense run on the same weights (the pruned
+    filters' outputs are exact affine constants).  A ``schedule`` built
+    with occupancy implies the same; ``sparse`` only controls the plan
+    made here.
+
     Returns ``(logits [B?, classes], NCForwardReport)`` — the report pairs
     each layer's emulated arithmetic cycles (min/max tree included) with
     the analytic model's serialized-pass cycles and modeled wall time.
@@ -621,11 +730,13 @@ def nc_forward(params: dict, x: jax.Array,
         engine = "jit" if B >= 2 else "host"
     specs_list = inception_v3_specs(config)
     specs = {s.name: s for s in specs_list}
-    if schedule is None:
-        schedule = sched.plan_network(specs_list, geom, batch=B)
-    plans = {p.spec.name: p for p in schedule.layers}
     if wpack is None:
         wpack = prepare_conv_weights(params, config)
+    if schedule is None:
+        occ = network_occupancy(wpack, config) if sparse else None
+        schedule = sched.plan_network(specs_list, geom, batch=B,
+                                      occupancy=occ)
+    plans = {p.spec.name: p for p in schedule.layers}
     records: list[NCLayerReport] = []
     state = {"concat_requant_cycles": 0}
 
@@ -663,13 +774,15 @@ def nc_forward(params: dict, x: jax.Array,
                     for qp in act_qps], np.float32)
     logits = (np.asarray(acc, np.float32) * sxw[:, None]
               + fc_bias[None, :].astype(np.float32))
-    modeled = sim.modeled_layer_cycles(spec, geom, const)
+    modeled = sim.modeled_layer_cycles(plans["FullyConnected"], geom, const)
     records.append(NCLayerReport(
         name="FullyConnected", kind="fc", out_shape=tuple(logits.shape),
         emulated_cycles=int(cycles), modeled_cycles=modeled["total_cycles"],
         serial_passes=modeled["serial_passes"], modeled_s=modeled["total_s"],
         lanes=stats.lanes, zero_operand_lanes=stats.zero_operand_lanes,
-        batch=B, filter_loads=stats.filter_loads))
+        batch=B, filter_loads=stats.filter_loads,
+        skipped_passes=modeled["skipped_passes"],
+        zero_filters=stats.zero_filters))
     report = NCForwardReport(config.name, tuple(records), batch=B,
                              concat_requant_cycles=state["concat_requant_cycles"])
     return jnp.asarray(logits if batched else logits[0]), report

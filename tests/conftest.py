@@ -1,0 +1,28 @@
+"""Shared fixtures: isolate the packed engine's module-level state.
+
+core/bitserial.py keeps three pieces of process-wide state:
+
+* ``SKIP_STATS`` — cumulative zero-operand/dead-plane elision counters,
+* ``ZERO_SKIP`` — the host engine's elision switch (tests toggle it for
+  differential sweeps),
+* the bucketed-jit ``_ENGINE_CACHE`` — a pure compilation cache keyed by
+  (planes, acc, K); shared across tests DELIBERATELY (clearing it per test
+  would recompile every jit-engine tile), and the tests that assert on
+  ``engine_cache_info`` call ``engine_cache_clear()`` themselves.
+
+The autouse fixture resets the first two around every test so sparsity
+sweeps (tests/test_sparsity.py) and skip-accounting asserts can never
+order-depend on whatever ran before them.
+"""
+import pytest
+
+from repro.core import bitserial as bs
+
+
+@pytest.fixture(autouse=True)
+def _isolate_engine_state():
+    bs.SKIP_STATS.reset()
+    zero_skip = bs.ZERO_SKIP
+    yield
+    bs.ZERO_SKIP = zero_skip
+    bs.SKIP_STATS.reset()
