@@ -141,10 +141,17 @@ def main() -> None:
             for line in mod.run():
                 print(line)
             ok.add(modname)
-        except Exception:  # pragma: no cover - harness robustness
+        except Exception as e:  # pragma: no cover - harness robustness
             failures += 1
             print(f"{modname},0,ERROR", file=sys.stdout)
-            traceback.print_exc(file=sys.stderr)
+            if type(e).__name__ == "BenchBaselineError":
+                # diagnosable baseline problem (sched_breakdown): the
+                # message names the fix — and THIS run refreshes the
+                # baseline below (kernel_bench runs after), so a rerun
+                # passes; no traceback needed
+                print(f"# {modname}: {e}", file=sys.stderr)
+            else:
+                traceback.print_exc(file=sys.stderr)
     # only persist a baseline from a complete kernel_bench run — a partial
     # RECORDS list would masquerade as a full perf baseline
     if "benchmarks.kernel_bench" in ok:

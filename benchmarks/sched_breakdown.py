@@ -1,29 +1,88 @@
 """Figure-13-style per-layer latency breakdown FROM THE SCHEDULE, plus the
 throughput-vs-batch sweep (Figure 16 shape) validated against the paper's
 headline, plus the dense-vs-sparse cycle breakdown of the sparsity-aware
-scheduler (fixed 50% filter pruning of the full paper network).
+scheduler (fixed 50% filter pruning of the full paper network), plus the
+SLO admission curve: predicted latency-vs-batch from the cycle model
+(core/slo.py) next to the throughput curve, and the batch the admission
+policy would pick per SLO budget.
 
 All tables are priced off :class:`~repro.core.schedule.NetworkSchedule`
 objects — the same plan the packed-engine emulation and the serving engine
 execute — so the breakdown columns (filter/input/output/mac/reduce/quant),
 the batching curve and the sparse credits cannot drift from what actually
 runs.  The module raises if a shape breaks (non-monotone throughput,
-plateau off the paper's 604 inf/s by >10%, or a sparse layer whose modeled
-cycles do not drop by the skipped-pass credit exactly), making it a
-perf-model gate, not just a printer."""
+plateau off the paper's 604 inf/s by >10%, a sparse layer whose modeled
+cycles do not drop by the skipped-pass credit exactly, a predicted latency
+curve that is not strictly increasing in the batch, or an SLO-chosen batch
+past ``stream_batch_limit``), making it a perf-model gate, not just a
+printer.
+
+The emulation-side SLO table calibrates its latency model from the
+measured batch wall time recorded in ``BENCH_kernels.json``
+(``emulation/nc_forward_b4_pruned50_dense``); a missing or stale-schema
+baseline fails the run with a diagnosable message (exit 2 from the CLI,
+``BenchBaselineError`` from :func:`run`) instead of a bare traceback —
+regenerate with ``python -m benchmarks.run``."""
 from __future__ import annotations
 
+import json
+import pathlib
 from collections import defaultdict
 
 from benchmarks.common import row
+from benchmarks.run import BENCH_JSON  # one source for the baseline path
 from repro.core.cache_geometry import XEON_E5_35MB
 from repro.core.schedule import plan_network, prune_occupancy
 from repro.core.simulator import (PAPER, modeled_layer_cycles,
                                   simulate_network, throughput)
-from repro.models.inception import inception_v3_specs
+from repro.core.slo import AdmissionPolicy, LatencyModel
+from repro.models.inception import inception_v3_specs, reduced_config
 
 BATCHES = (1, 2, 4, 8, 16, 32, 64, 128, 256)
 PRUNE = 0.5  # the fixed dense-vs-sparse comparison point
+SLO_BUDGETS_MS = (5, 10, 20, 50, 100)  # paper-scale (modeled hardware time)
+SLO_BUDGETS_EMU_S = (1, 2, 4, 8)  # emulation wall-clock budgets
+CALIBRATION_OP = "emulation/nc_forward_b4_pruned50_dense"  # batch-4 wall
+
+
+class BenchBaselineError(RuntimeError):
+    """BENCH_kernels.json missing or not the expected schema."""
+
+
+def load_bench_baseline(path: pathlib.Path = BENCH_JSON) -> dict:
+    """Load the perf baseline, mapping op name -> us_per_call.
+
+    Raises :class:`BenchBaselineError` with an actionable message when the
+    file is absent or its schema is stale (no ``records`` list of
+    ``{op, us_per_call}`` entries, or the calibration record the SLO table
+    needs is gone) — the bench gate's failure mode must name its cause,
+    not dump a KeyError traceback."""
+    if not path.exists():
+        raise BenchBaselineError(
+            f"{path.name} not found at {path} — the perf baseline is "
+            f"written by `python -m benchmarks.run`; run it once to "
+            f"regenerate")
+    try:
+        payload = json.loads(path.read_text())
+    except ValueError as e:
+        raise BenchBaselineError(
+            f"{path.name} is not valid JSON ({e}) — regenerate with "
+            f"`python -m benchmarks.run`") from e
+    records = payload.get("records") if isinstance(payload, dict) else None
+    if not isinstance(records, list) or not all(
+            isinstance(r, dict) and "op" in r and "us_per_call" in r
+            for r in records):
+        raise BenchBaselineError(
+            f"{path.name} has a stale schema (expected a dict with a "
+            f"'records' list of {{op, us_per_call}} entries) — regenerate "
+            f"with `python -m benchmarks.run`")
+    by_op = {r["op"]: float(r["us_per_call"]) for r in records}
+    if CALIBRATION_OP not in by_op:
+        raise BenchBaselineError(
+            f"{path.name} lacks the '{CALIBRATION_OP}' record the SLO "
+            f"latency calibration needs — regenerate with "
+            f"`python -m benchmarks.run`")
+    return by_op
 
 
 def run() -> list[str]:
@@ -103,8 +162,90 @@ def run() -> list[str]:
                     f"{schedule.filter_bytes_loaded / 1e6:.1f} -> "
                     f"{sparse.filter_bytes_loaded / 1e6:.1f} MB, "
                     f"{sparse.skipped_passes} passes/img skipped"))
+    rows.extend(_slo_rows(specs))
+    return rows
+
+
+def _slo_rows(specs) -> list[str]:
+    """Latency-vs-batch curve + SLO-chosen batch, both gated.
+
+    Paper scale: the uncalibrated model predicts modeled hardware time;
+    the curve must be strictly increasing in the batch (the admission
+    policy bisects it) and the chosen batch can never pass the §VI-C
+    ``stream_batch_limit`` (1 at paper scale — the stem's activations
+    fill the reserved way, so SLO admission there runs single images and
+    the spill cost inside the curve is what batching would pay).
+
+    Emulation scale: a reduced-config model calibrated from the measured
+    batch-4 wall time in ``BENCH_kernels.json`` shows the policy actually
+    walking batch sizes as the budget grows."""
+    rows = []
+    model = LatencyModel(lambda b: plan_network(specs, XEON_E5_35MB, batch=b))
+    lat = [model.predict_p99_s(b) for b in BATCHES]
+    for b, l, p in zip(BATCHES, lat, (model.predict_s(b) for b in BATCHES)):
+        rows.append(row(f"slo/latency_batch_{b}", l * 1e6,
+                        f"predicted {p * 1e3:.2f} ms, p99 {l * 1e3:.2f} ms "
+                        f"(modeled hardware time)"))
+    if not all(b > a for a, b in zip(lat, lat[1:])):
+        raise RuntimeError(
+            f"predicted latency not strictly increasing in batch: {lat}")
+    limit = model.stream_batch_limit
+    chosen = []
+    # NOTE: the policy's batch_cap already clamps to the stream limit, so
+    # these raises are TRIPWIRES for cap-logic regressions, not live
+    # checks: at paper scale (limit 1, budgets up to 100 ms) any future
+    # change that drops the stream clamp from AdmissionPolicy.batch_cap
+    # immediately picks a multi-image batch here and fails the gate.
+    for ms in SLO_BUDGETS_MS:
+        pol = AdmissionPolicy(model, ms / 1e3, max_batch=max(BATCHES))
+        n = pol.target_batch(ms / 1e3)
+        chosen.append(n)
+        if n > limit:
+            raise RuntimeError(
+                f"SLO-chosen batch {n} exceeds stream_batch_limit {limit} "
+                f"at {ms} ms")
+        cmp = "<=" if model.predict_p99_s(n) <= ms / 1e3 else "> (floor: miss)"
+        rows.append(row(f"slo/batch_for_slo_{ms}ms", n,
+                        f"p99 {model.predict_p99_s(n) * 1e3:.2f} ms {cmp} "
+                        f"{ms} ms budget (stream limit {limit})"))
+    if chosen != sorted(chosen):
+        raise RuntimeError(f"SLO-chosen batch not monotone in budget: "
+                           f"{chosen}")
+
+    # emulation-side: calibrate from the recorded batch-4 wall time
+    baseline = load_bench_baseline()
+    wall4_s = baseline[CALIBRATION_OP] / 1e6
+    cfg = reduced_config()
+    rspecs = inception_v3_specs(cfg)
+    emu = LatencyModel(lambda b: plan_network(rspecs, XEON_E5_35MB, batch=b))
+    emu.observe(4, wall4_s)
+    rlimit = emu.stream_batch_limit
+    rows.append(row("slo/calibration", emu.scale,
+                    f"reduced-config wall/modeled x{emu.scale:.0f} from "
+                    f"{CALIBRATION_OP} ({wall4_s:.2f} s at batch 4)"))
+    prev = 0
+    for s in SLO_BUDGETS_EMU_S:
+        pol = AdmissionPolicy(emu, float(s), max_batch=64)
+        n = pol.target_batch(float(s))
+        if n > rlimit:
+            raise RuntimeError(
+                f"SLO-chosen batch {n} exceeds stream_batch_limit "
+                f"{rlimit} at {s} s (emulation)")
+        if n < prev:
+            raise RuntimeError(
+                f"emulation SLO-chosen batch not monotone in budget at "
+                f"{s} s: {n} < {prev}")
+        prev = n
+        rows.append(row(f"slo/batch_for_slo_{s}s_emulated", n,
+                        f"calibrated p99 {emu.predict_p99_s(n):.2f} s <= "
+                        f"{s} s budget (stream limit {rlimit}, cap 64)"))
     return rows
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    import sys
+    try:
+        print("\n".join(run()))
+    except BenchBaselineError as e:
+        print(f"sched_breakdown: error: {e}", file=sys.stderr)
+        sys.exit(2)

@@ -5,8 +5,16 @@ Shows the three weight precisions the bit-serial architecture trades
 between (8/4/2-bit), with per-batch throughput, plus greedy-decode
 agreement between the fp and W8-dequant models.
 
+With ``--neural-cache`` the demo serves quantized Inception images through
+the SLO-aware Neural Cache engine instead: admission batch sizes come from
+the cycle model's predicted p99 latency (core/slo.py), calibrated on the
+fly against measured batch wall times, and the run prints the admitted
+batch histogram and SLO hit rate.
+
 Run:  PYTHONPATH=src python examples/serve_quantized.py
+      PYTHONPATH=src python examples/serve_quantized.py --neural-cache --slo-ms 5000
 """
+import argparse
 import time
 
 import jax
@@ -14,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduced_config
-from repro.launch.serve import Request, ServingEngine
+from repro.launch.serve import NCRequest, NCServingEngine, Request, ServingEngine
 from repro.models import transformer as T
 from repro.quant import quantize_lm_params
 
@@ -33,6 +41,44 @@ def dequantize_tree(qparams):
 
     return jax.tree.map(leaf, qparams,
                         is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+
+
+def main_neural_cache(slo_ms: float, requests: int = 6) -> None:
+    """SLO-aware Neural Cache serving (§VI-C batching under a deadline).
+
+    Submits ``requests`` images to an :class:`NCServingEngine` armed with
+    ``--slo-ms``: the first admission sizes its batch from the modeled
+    cycles alone, the measured wall time calibrates the
+    :class:`~repro.core.slo.LatencyModel`, and later admissions shrink or
+    grow to keep the predicted p99 under the remaining deadline budget.
+    Logits are asserted bit-identical to standalone ``nc_forward`` runs —
+    the SLO knob changes batch sizes, never results."""
+    from repro.models import inception
+
+    cfg = inception.reduced_config(img=47, width_div=8, classes=8,
+                                   stages=("a",))
+    params = inception.init_params(jax.random.key(0), config=cfg)
+    eng = NCServingEngine(params, cfg, max_batch=4, slo_ms=slo_ms)
+    rng = np.random.default_rng(0)
+    imgs = rng.random((requests, cfg.img, cfg.img, 3)).astype(np.float32)
+    for r in range(requests):
+        eng.submit(NCRequest(rid=r, image=imgs[r]))
+    t0 = time.perf_counter()
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    s = eng.stats()
+    print(f"[serve-nc] {len(done)} images in {dt:.2f}s emulated, "
+          f"{eng.steps} admitted batches {s['batch_histogram']} "
+          f"(stream limit {s['stream_batch_limit']})")
+    print(f"[serve-nc] SLO {slo_ms:.0f} ms: {s['slo_hits']} hit / "
+          f"{s['slo_misses']} miss (rate "
+          f"{s['slo_hit_rate']:.0%}); latency model calibrated x"
+          f"{s['calibration_scale']:.0f} wall/modeled over "
+          f"{s['calibration_samples']} batches")
+    r0 = next(r for r in done if r.rid == 0)
+    ref, _ = inception.nc_forward(params, imgs[0], config=cfg)
+    np.testing.assert_array_equal(r0.logits, np.asarray(ref))
+    print("[serve-nc] logits bit-identical to standalone nc_forward — OK")
 
 
 def main():
@@ -66,4 +112,17 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--neural-cache", action="store_true",
+                    help="serve Inception images through the SLO-aware "
+                         "Neural Cache engine instead of the LM")
+    ap.add_argument("--slo-ms", type=float, default=5000.0,
+                    help="per-request latency SLO for --neural-cache "
+                         "(emulation wall-clock; the model calibrates "
+                         "wall vs modeled cycles on the fly)")
+    ap.add_argument("--requests", type=int, default=6)
+    args = ap.parse_args()
+    if args.neural_cache:
+        main_neural_cache(args.slo_ms, args.requests)
+    else:
+        main()

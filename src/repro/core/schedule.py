@@ -79,7 +79,10 @@ Consumers (the "one source of truth" contract):
   so modeled and emulated cycles agree on the layout by construction
   (skipped-pass credits included),
 * models/inception.py executes the schedule end to end (``nc_forward``),
-* launch/serve.py admits request batches sized to the schedule.
+* launch/serve.py admits request batches sized to the schedule, and
+* core/slo.py predicts per-batch serving latency from it (the SLO
+  admission policy's control input; ``stream_batch_limit`` is its hard
+  batch cap).
 """
 from __future__ import annotations
 
@@ -190,7 +193,28 @@ class LayerOccupancy:
 
 @dataclasses.dataclass(frozen=True)
 class SlicePlan:
-    """One layer's execution plan (see the module docstring field map)."""
+    """One layer's execution plan (see the module docstring field map).
+
+    Invariants (asserted by tests/test_schedule.py and
+    tests/test_sparsity.py — discoverable here so you don't have to read
+    them):
+
+    * **Credit exactness** — the simulator prices ``skipped_passes`` as
+      an exact per-pass credit: for any geometry and batch,
+      ``dense.total_cycles - sparse.total_cycles ==
+      sparse.skip_credit_cycles`` holds to the cycle
+      (``simulator.modeled_layer_cycles``), because occupancy never
+      changes the mapped layout — only the executed pass count.
+    * **Dense bit-identity** — a plan built with ``occupancy=None`` (or
+      with zero detected sparsity) is field-for-field identical to the
+      dense plan, and every consumer's outputs (engine logits, simulator
+      numbers) are bit-identical to pre-sparsity behavior.
+    * ``executed_passes == serial_passes - skipped_passes`` is what the
+      engine runs per image; pruned filters also leave ``filter_bytes``
+      (the §VI-C residency of the live set).
+    * The tile bound ``row_bits * tile_rows * tile_filters <=
+      geom.compute_slots`` always holds (batch folded into the row
+      axis)."""
 
     spec: LayerSpec
     mapped: MappedLayer
@@ -242,7 +266,18 @@ def plan_layer(spec: LayerSpec,
     filters are all zero are dropped (``skipped_passes``, priced as an
     exact cycle credit by the simulator) and pruned filters are not loaded
     (``filter_bytes`` shrinks to the live set).  ``occupancy=None`` plans
-    are field-for-field identical to the dense plan."""
+    are field-for-field identical to the dense plan.
+
+    Invariants the tests pin down (tests/test_sparsity.py):
+
+    * the skipped-pass count is *monotone* in sparsity — more zero
+      filters never skip fewer passes — and comes from re-running the
+      mapper's ONE serialization rule (``serial_passes_for``) over the
+      live conv count, never from ad-hoc arithmetic here,
+    * an occupancy whose ``total_filters`` disagrees with the spec
+      raises (over-claiming sparsity is an error, not an optimization),
+    * zero detected sparsity (``occupancy`` with no zero filters) plans
+      structurally equal to ``occupancy=None``."""
     mapped = map_layer(spec, geom)
     E = F = spec.E
     skipped = 0
@@ -303,7 +338,16 @@ def plan_layer(spec: LayerSpec,
 
 @dataclasses.dataclass(frozen=True)
 class NetworkSchedule:
-    """Per-layer :class:`SlicePlan` list for one network at one batch size."""
+    """Per-layer :class:`SlicePlan` list for one network at one batch size.
+
+    The ONE plan object every consumer shares: the packed engine executes
+    it, the simulator prices it (``simulate_network(schedule)``), the
+    serving engine admits batches against it, and the SLO latency model
+    (core/slo.py) predicts per-batch latency from it.  Asserted
+    invariants: ``filter_bytes_loaded`` is independent of ``batch``
+    (§VI-C residency — filters load once per layer per batch), and
+    ``simulate_network`` consuming a schedule reproduces the spec-planned
+    numbers to 1e-12 (tests/test_schedule.py)."""
 
     layers: tuple[SlicePlan, ...]
     geom: CacheGeometry
@@ -342,7 +386,11 @@ class NetworkSchedule:
         layer (inputs + outputs share the way) — the §VI-C streaming
         bound; batches beyond it spill (see ``spill_to_dram``).  By
         construction independent of pruning: activations stream at full
-        width whether or not filters are zero."""
+        width whether or not filters are zero (asserted by
+        tests/test_sparsity.py — a fully pruned network streams no deeper
+        than a dense one).  This is also the hard admission cap of the
+        SLO serving policy (core/slo.py): admitted batches never exceed
+        it."""
         widest = max(p.input_bytes_per_image + p.output_bytes_per_image
                      for p in self.layers)
         return max(1, self.geom.io_way_bytes // widest)

@@ -37,7 +37,8 @@ from repro.core.mapper import LayerSpec, MappedLayer
 from repro.core.schedule import NetworkSchedule, SlicePlan, plan_layer, plan_network
 
 __all__ = ["SimConstants", "LayerResult", "NetworkResult", "simulate_layer",
-           "simulate_network", "modeled_layer_cycles", "throughput", "PAPER"]
+           "simulate_network", "modeled_layer_cycles", "batch_time_s",
+           "throughput", "PAPER"]
 
 MIB = 1 << 20
 
@@ -365,12 +366,23 @@ def simulate_network(
         geom, const, schedule)
 
 
-def throughput(result: NetworkResult, batch: int, sockets: int = 2) -> float:
-    """Inferences/s for a batch processed layer-serially (§IV-E).
+def batch_time_s(result: NetworkResult, batch: int) -> float:
+    """Modeled time to process ONE admitted batch of ``batch`` images,
+    layer-serially (§IV-E):
 
     total(N) = filter_load + N * marginal + N * spill  (spill only when the
     batch outgrows the reserved way, i.e. N >= 2).
-    """
+
+    This is the per-batch latency the serving admission policy predicts
+    against (core/slo.py): strictly increasing in ``batch`` (marginal and
+    spill are per-image costs), with the filter load amortizing — the
+    latency/throughput trade the SLO knob walks.  ``throughput`` is its
+    reciprocal view."""
     spill = result.spill_s_per_image() if batch > 1 else 0.0
-    total = result.filter_s + batch * (result.marginal_s + spill)
-    return sockets * batch / total
+    return result.filter_s + batch * (result.marginal_s + spill)
+
+
+def throughput(result: NetworkResult, batch: int, sockets: int = 2) -> float:
+    """Inferences/s for a batch processed layer-serially (§IV-E): the
+    batch count over :func:`batch_time_s`, scaled by ``sockets``."""
+    return sockets * batch / batch_time_s(result, batch)

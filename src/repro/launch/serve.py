@@ -20,12 +20,23 @@ per batch size and routes every admitted batch through
 ``models.inception.nc_forward(batch=N)`` (batch folded into the packed
 lane axis, in-cache §IV-D min/max quantization, bucketed-jit engine).
 
+With ``--slo-ms`` the engine turns SLO-aware (core/slo.py): a
+:class:`~repro.core.slo.LatencyModel` built over the SAME per-batch-size
+plan cache predicts ``latency(batch)`` from the simulator's modeled
+cycles calibrated against measured batch wall times, and an
+:class:`~repro.core.slo.AdmissionPolicy` picks the largest batch whose
+predicted p99 fits the oldest queued request's remaining deadline budget
+— never past ``NetworkSchedule.stream_batch_limit`` — admitting ragged
+tails early when holding would blow the deadline.  Per-request latency,
+the admitted-batch histogram and the SLO hit rate are tracked.
+
 Weights can be served quantized (W8A8 via repro.quant) — the paper's
 inference pipeline — with ``--quantize``.
 
 Usage:
     python -m repro.launch.serve --arch olmo-1b --reduced --requests 12
     python -m repro.launch.serve --neural-cache --requests 8 --max-batch 4
+    python -m repro.launch.serve --neural-cache --requests 8 --slo-ms 50
 """
 from __future__ import annotations
 
@@ -150,6 +161,10 @@ class NCRequest:
     image: np.ndarray  # [H, W, 3] float32 in [0, 1]
     logits: np.ndarray | None = None
     done: bool = False
+    # SLO accounting (stamped by the engine)
+    arrival_t: float = 0.0  # engine-clock submit time
+    latency_s: float | None = None  # queue wait + batch execution wall
+    slo_ok: bool | None = None  # None when the engine has no SLO set
 
 
 class NCServingEngine(BatchQueueEngine):
@@ -171,11 +186,33 @@ class NCServingEngine(BatchQueueEngine):
     schedule, with logits byte-identical to dense execution — a deployment
     serving an EIE-style pruned model gets the cycle and wall-time win for
     free.  Unpruned weights detect zero sparsity and plan exactly dense.
+
+    ``slo_ms`` arms the SLO-aware admission policy (core/slo.py): instead
+    of greedy FIFO-up-to-``max_batch``, each ``step()`` asks the policy
+    for the largest batch whose predicted p99 latency (from the
+    :class:`~repro.core.slo.LatencyModel` sharing this engine's plan
+    cache) fits the oldest queued request's remaining deadline budget,
+    capped by ``min(max_batch, schedule.stream_batch_limit)``.  Shallow
+    queues are *held* for more arrivals while slack remains and flushed
+    early (``ragged-early``) when it runs out; ``run()`` drains with
+    ``flush=True`` since no more arrivals are coming.  Execution is
+    unchanged — admitted batches route through the same planned
+    ``nc_forward``, so logits stay bit-identical to standalone runs
+    whatever batch sizes the policy picks.
+
+    The engine clock is injectable (``now_fn``; ``step``/``submit`` also
+    take an explicit ``now``) so deadline behavior is testable without
+    wall-clock sleeps.  Stats: ``batch_histogram`` (admitted batch size →
+    count), ``slo_hits``/``slo_misses``/``slo_hit_rate``, ``decisions``
+    (every :class:`~repro.core.slo.AdmissionDecision`).
     """
 
     def __init__(self, params, config=None, *, max_batch: int = 4,
-                 geom=None, engine: str | None = None, sparse: bool = True):
+                 geom=None, engine: str | None = None, sparse: bool = True,
+                 slo_ms: float | None = None, hold_slack_ms: float | None = None,
+                 now_fn=time.monotonic):
         from repro.core import schedule as nc_schedule
+        from repro.core import slo as nc_slo
         from repro.core.cache_geometry import XEON_E5_35MB
         from repro.models import inception
 
@@ -187,6 +224,7 @@ class NCServingEngine(BatchQueueEngine):
         self.max_batch = max_batch
         self.geom = geom or XEON_E5_35MB
         self.engine = engine
+        self.now_fn = now_fn
         self.specs = inception.inception_v3_specs(self.config)
         # resident filters quantize ONCE per deployment, not once per batch;
         # the occupancy scan runs on the same resident weights
@@ -198,6 +236,20 @@ class NCServingEngine(BatchQueueEngine):
                                            occupancy=self.occupancy)
         self._schedules = {max_batch: self.schedule}
         self.reports = []
+        # SLO control loop: the latency model prices the SAME plan objects
+        # this engine executes (shared _schedule_for cache)
+        self.latency_model = nc_slo.LatencyModel(self._schedule_for)
+        self.slo_s = slo_ms / 1e3 if slo_ms is not None else None
+        self.policy = None
+        if self.slo_s is not None:
+            self.policy = nc_slo.AdmissionPolicy(
+                self.latency_model, self.slo_s, max_batch,
+                hold_slack_s=(hold_slack_ms / 1e3
+                              if hold_slack_ms is not None else None))
+        self.decisions = []
+        self.batch_histogram: dict[int, int] = {}
+        self.slo_hits = 0
+        self.slo_misses = 0
 
     def _schedule_for(self, n: int):
         if n not in self._schedules:
@@ -206,27 +258,81 @@ class NCServingEngine(BatchQueueEngine):
                                                     occupancy=self.occupancy)
         return self._schedules[n]
 
-    def step(self) -> bool:
+    def submit(self, req, now: float | None = None) -> None:
+        req.arrival_t = self.now_fn() if now is None else now
+        super().submit(req)
+
+    def step(self, now: float | None = None, *, flush: bool = False) -> bool:
+        """One engine tick: admit a batch (policy-sized under an SLO,
+        greedy FIFO otherwise) and execute it.  Returns False when
+        nothing was admitted — queue empty, or the policy is holding a
+        shallow queue for more arrivals (``flush=True`` overrides the
+        hold, not the SLO batch cap)."""
         if not self.queue:
             return False
-        batch = [self.queue.pop(0)
-                 for _ in range(min(self.max_batch, len(self.queue)))]
+        now = self.now_fn() if now is None else now
+        if self.policy is None:
+            n = min(self.max_batch, len(self.queue))
+        else:
+            decision = self.policy.admit(
+                len(self.queue), now - self.queue[0].arrival_t, flush=flush)
+            self.decisions.append(decision)
+            if decision.admit == 0:
+                return False
+            n = decision.admit
+        batch = [self.queue.pop(0) for _ in range(n)]
         x = np.stack([np.asarray(r.image, np.float32) for r in batch])
+        t0 = time.perf_counter()
         logits, report = self._inception.nc_forward(
             self.params, x, config=self.config, geom=self.geom,
             engine=self.engine, schedule=self._schedule_for(len(batch)),
             wpack=self.wpack)
+        wall = time.perf_counter() - t0
+        # calibrate the latency model with the measured batch wall time so
+        # later admissions predict from evidence, not just modeled cycles
+        self.latency_model.observe(len(batch), wall)
+        self.batch_histogram[n] = self.batch_histogram.get(n, 0) + 1
         for i, r in enumerate(batch):
             r.logits = np.asarray(logits[i])
             r.done = True
+            r.latency_s = (now - r.arrival_t) + wall
+            if self.slo_s is not None:
+                r.slo_ok = r.latency_s <= self.slo_s
+                if r.slo_ok:
+                    self.slo_hits += 1
+                else:
+                    self.slo_misses += 1
             self.completed.append(r)
         self.reports.append(report)
         self.steps += 1
         return True
 
+    @property
+    def slo_hit_rate(self) -> float | None:
+        total = self.slo_hits + self.slo_misses
+        return self.slo_hits / total if total else None
+
+    def stats(self) -> dict:
+        """Serving stats: admitted-batch histogram, SLO accounting and the
+        latency model's calibration state."""
+        return dict(
+            steps=self.steps,
+            completed=len(self.completed),
+            batch_histogram=dict(sorted(self.batch_histogram.items())),
+            slo_ms=self.slo_s * 1e3 if self.slo_s is not None else None,
+            slo_hits=self.slo_hits,
+            slo_misses=self.slo_misses,
+            slo_hit_rate=self.slo_hit_rate,
+            calibration_scale=self.latency_model.scale,
+            calibration_samples=self.latency_model.samples,
+            stream_batch_limit=self.schedule.stream_batch_limit,
+        )
+
     def run(self) -> list[NCRequest]:
-        while self.step():
-            pass
+        # draining: no more arrivals are coming, so holding for a fuller
+        # batch is pointless — flush, keeping the SLO batch cap
+        while self.queue:
+            self.step(flush=True)
         return self.completed
 
 
@@ -236,7 +342,8 @@ def _main_neural_cache(args) -> int:
 
     cfg = inception.reduced_config()
     params = inception.init_params(jax.random.key(0), config=cfg)
-    engine = NCServingEngine(params, cfg, max_batch=args.max_batch)
+    engine = NCServingEngine(params, cfg, max_batch=args.max_batch,
+                             slo_ms=args.slo_ms)
     rng = np.random.default_rng(0)
     for r in range(args.requests):
         engine.submit(NCRequest(
@@ -255,6 +362,15 @@ def _main_neural_cache(args) -> int:
           f"<= {args.max_batch}); modeled: {res.latency_s*1e3:.3f} ms/img "
           f"unbatched, {tp:.0f} inf/s at batch {args.max_batch} "
           f"(single socket)")
+    if args.slo_ms is not None:
+        s = engine.stats()
+        print(f"[serve-nc] SLO {args.slo_ms:.0f} ms: hit rate "
+              f"{s['slo_hit_rate']:.0%} ({s['slo_hits']} hit / "
+              f"{s['slo_misses']} miss), admitted batches "
+              f"{s['batch_histogram']}, stream limit "
+              f"{s['stream_batch_limit']}, calibration x"
+              f"{s['calibration_scale']:.1f} over "
+              f"{s['calibration_samples']} batches")
     return 0
 
 
@@ -267,6 +383,10 @@ def main() -> int:
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="per-request latency SLO for --neural-cache: "
+                         "batches are sized by the predicted p99 from the "
+                         "cycle model (core/slo.py) instead of greedy FIFO")
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-tokens", type=int, default=16)
