@@ -26,11 +26,27 @@ from repro.kernels import ops as K
 
 RECORDS: list[dict] = []
 
+# op name -> zero-arg callable returning a fresh us_per_call measurement.
+# benchmarks/run.py re-times flagged regressions through this registry
+# (median of 3) before recording them, so the known kernel/f32_dot
+# host-load flap (SPEEDUP_NOTES["host_noise"]) stops producing phantom
+# notes.regressions entries.  Only the subsecond kernel/* ops register —
+# re-timing a multi-second emulation record would double the bench wall.
+RETIMERS: dict[str, object] = {}
+
 
 def _rec(name: str, us: float, shape: str, derived: str = "") -> str:
     RECORDS.append({"op": name, "shape": shape, "us_per_call": round(us, 2),
                     "derived": derived})
     return row(name, us, derived or shape)
+
+
+def _timed_rec(name: str, call, iters: int, shape: str,
+               derived: str = "") -> str:
+    """Time ``call``, record it, and register a retimer for it."""
+    _, us = timed(call, iters=iters)
+    RETIMERS[name] = lambda: timed(call, iters=iters)[1]
+    return _rec(name, us, shape, derived)
 
 
 def _emulation_rows():
@@ -113,6 +129,7 @@ def _emulation_rows():
                     f"{len(report.layers)} layers, "
                     f"{report.total_emulated_cycles} emulated cycles"))
     out.extend(_sparsity_rows())
+    out.extend(_overlap_rows())
     return out
 
 
@@ -171,9 +188,12 @@ def _sparsity_rows():
     return out
 
 
-def run():
+def _kernel_rows():
+    """The subsecond ``kernel/*`` subset (every op registers a retimer).
+
+    This is also the whole of ``python -m benchmarks.run --quick``: fast
+    enough for a CI pre-gate, diffed against the same baseline."""
     out = []
-    RECORDS.clear()
     k1, k2 = jax.random.split(jax.random.key(0))
     M, Kdim, N = 256, 512, 256
     x = jax.random.normal(k1, (M, Kdim), jnp.float32)
@@ -182,14 +202,15 @@ def run():
     xq = quantize(x, qp)
 
     f32 = jax.jit(lambda a, b: a @ b)
-    _, us = timed(lambda: jax.block_until_ready(f32(x, w)), iters=15)
-    out.append(_rec("kernel/f32_dot", us, f"{M}x{Kdim}x{N}"))
+    out.append(_timed_rec("kernel/f32_dot",
+                          lambda: jax.block_until_ready(f32(x, w)), 15,
+                          f"{M}x{Kdim}x{N}"))
 
     wq, ws = quantize_per_channel(w)
     q8 = jax.jit(lambda a, b: K.quant_matmul(a, b, qp.scale, ws.reshape(-1)))
-    _, us = timed(lambda: jax.block_until_ready(q8(xq, wq)), iters=15)
-    out.append(_rec("kernel/w8a8_fused", us, f"{M}x{Kdim}x{N}",
-                    "int8 MXU path (xla ref on cpu)"))
+    out.append(_timed_rec("kernel/w8a8_fused",
+                          lambda: jax.block_until_ready(q8(xq, wq)), 15,
+                          f"{M}x{Kdim}x{N}", "int8 MXU path (xla ref on cpu)"))
 
     base_flops = None
     for bits in (8, 4, 2, 1):
@@ -200,10 +221,12 @@ def run():
         flops = xla_cost_analysis(fn.lower(xq, planes).compile()).get("flops", 0)
         if bits == 8:
             base_flops = flops or 1
-        _, us = timed(lambda: jax.block_until_ready(fn(xq, planes)), iters=9)
-        out.append(_rec(f"kernel/bitserial_{bits}b", us, f"{M}x{Kdim}x{N}",
-                        f"{bits} planes byte-packed; HLO flops "
-                        f"{flops/base_flops:.2f}x of 8b"))
+        out.append(_timed_rec(
+            f"kernel/bitserial_{bits}b",
+            lambda fn=fn, planes=planes: jax.block_until_ready(fn(xq, planes)),
+            9, f"{M}x{Kdim}x{N}",
+            f"{bits} planes byte-packed; HLO flops "
+            f"{flops/base_flops:.2f}x of 8b"))
 
     # W4A4: byte-packing extended to the activations (2 elements/byte,
     # 2 half-K MXU passes per plane) — flops still plane-proportional
@@ -215,10 +238,126 @@ def run():
     fn4 = jax.jit(lambda a, p: K.bitserial_matmul_a4(
         a, p, qp.scale, ws4.reshape(-1), k=Kdim))
     flops4 = xla_cost_analysis(fn4.lower(xp4, wp4).compile()).get("flops", 0)
-    _, us = timed(lambda: jax.block_until_ready(fn4(xp4, wp4)), iters=9)
-    out.append(_rec("kernel/bitserial_w4a4_packed_act", us, f"{M}x{Kdim}x{N}",
-                    f"2 elems/byte activations; HLO flops "
-                    f"{flops4/base_flops:.2f}x of 8b"))
+    out.append(_timed_rec("kernel/bitserial_w4a4_packed_act",
+                          lambda: jax.block_until_ready(fn4(xp4, wp4)), 9,
+                          f"{M}x{Kdim}x{N}",
+                          f"2 elems/byte activations; HLO flops "
+                          f"{flops4/base_flops:.2f}x of 8b"))
+    return out
 
+
+def _overlap_rows():
+    """Serial-vs-overlapped record pair: a batch-4 reduced config executed
+    through the PR 3/4 serial plan and through the double-buffered plan
+    (``nc_forward(..., overlap=True)``: pass k+1's packed filter columns
+    prefetch while pass k's MAC+reduce runs).  The workload is the stem at
+    ``width_div=2`` on a ``scaled(4)`` geometry — at the full 35 MB array
+    every reduced-config layer is single-pass and the §IV-E legality rule
+    correctly denies overlap everywhere (nothing to hide), so the measured
+    pair runs where multi-pass layers carry ~3/4 of the modeled time and
+    the double buffer actually executes.  GATE: overlapped wall time must
+    stay within :func:`benchmarks.common.overlap_wall_slack` of serial —
+    no-loss where a second core gives the prefetch real concurrency,
+    parity-within-noise on a single-core container (total work is
+    conserved there; the model's floor for the measured win is zero
+    either way, since overlap only re-times the copies, never the
+    computed values); logits are asserted byte-identical, making this a
+    correctness gate too.  A third record runs the 50%-pruned sparse
+    schedule WITH overlap (pruning drops passes first, overlap hides the
+    survivors' loads), gated locally against its own sparse-serial
+    timing.  Interleaved min-of-3 as in :func:`_sparsity_rows` so host
+    noise cancels."""
+    import time
+
+    import jax as _jax
+    from benchmarks.common import overlap_wall_slack
+    from repro.core.cache_geometry import XEON_E5_35MB
+    from repro.models import inception
+
+    cfg = inception.reduced_config(width_div=2, stages=())
+    geom = XEON_E5_35MB.scaled(4)
+    params = inception.init_params(_jax.random.PRNGKey(0), config=cfg)
+    wpack = inception.prepare_conv_weights(params, cfg)
+    xb = np.asarray(_jax.random.uniform(
+        _jax.random.PRNGKey(1), (4, cfg.img, cfg.img, 3), jnp.float32))
+
+    wall_s = wall_o = float("inf")
+    logits_srl = logits_ov = None
+    rep_o = None
+    for _ in range(3):
+        t0 = time.perf_counter()
+        logits_srl, _ = inception.nc_forward(params, xb, config=cfg,
+                                             geom=geom, wpack=wpack)
+        wall_s = min(wall_s, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        logits_ov, rep_o = inception.nc_forward(params, xb, config=cfg,
+                                                geom=geom, wpack=wpack,
+                                                overlap=True)
+        wall_o = min(wall_o, time.perf_counter() - t0)
+    if not np.array_equal(np.asarray(logits_srl), np.asarray(logits_ov)):
+        raise RuntimeError("overlap gate: overlapped nc_forward logits "
+                           "diverge from serial on the same weights")
+    slack = overlap_wall_slack()
+    if wall_o > slack * wall_s:
+        raise RuntimeError(
+            f"overlap gate: overlapped wall time {wall_o * 1e3:.0f} ms "
+            f"exceeds {slack:.2f}x serial {wall_s * 1e3:.0f} ms at batch "
+            f"4 — the double buffer must be free, not a cost")
+    n_ov = sum(1 for l in rep_o.layers if l.overlap)
+    if n_ov == 0:
+        raise RuntimeError("overlap gate: no layer executed double-buffered "
+                           "— the record pair would be measuring noise")
+    shape = f"{cfg.img}px /2 widths stem, batch 4, 1/4-scale array"
+    out = [
+        _rec("emulation/nc_forward_b4_serial", wall_s * 1e6, shape,
+             f"{wall_s / 4 * 1e3:.0f} ms/img; load-then-compute per pass"),
+        _rec("emulation/nc_forward_b4_overlap", wall_o * 1e6, shape,
+             f"{wall_o / 4 * 1e3:.0f} ms/img; {n_ov} layers prefetch "
+             f"filters under MAC+reduce, {wall_s / wall_o:.2f}x vs serial"),
+    ]
+
+    # pruning x overlap: the sparse schedule's surviving passes still
+    # double-buffer; gate against sparse-serial so the comparison point
+    # shares the pruned pass list
+    wp = inception.prune_wpack(wpack, 0.5)
+    wall_ps = wall_po = float("inf")
+    logits_ps = logits_po = None
+    for _ in range(3):
+        t0 = time.perf_counter()
+        logits_ps, _ = inception.nc_forward(params, xb, config=cfg,
+                                            geom=geom, wpack=wp, sparse=True)
+        wall_ps = min(wall_ps, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        logits_po, _ = inception.nc_forward(params, xb, config=cfg,
+                                            geom=geom, wpack=wp, sparse=True,
+                                            overlap=True)
+        wall_po = min(wall_po, time.perf_counter() - t0)
+    if not np.array_equal(np.asarray(logits_ps), np.asarray(logits_po)):
+        raise RuntimeError("overlap gate: sparse+overlap logits diverge "
+                           "from sparse-serial on the same pruned weights")
+    if wall_po > slack * wall_ps:
+        raise RuntimeError(
+            f"overlap gate: sparse+overlap wall time {wall_po * 1e3:.0f} ms "
+            f"exceeds {slack:.2f}x sparse-serial {wall_ps * 1e3:.0f} ms "
+            f"at batch 4")
+    out.append(_rec(
+        "emulation/nc_forward_b4_pruned50_overlap", wall_po * 1e6,
+        f"{shape}, 50% pruned",
+        f"{wall_po / 4 * 1e3:.0f} ms/img; skipped passes first, loads "
+        f"hidden second, {wall_ps / wall_po:.2f}x vs sparse-serial"))
+    return out
+
+
+def run():
+    RECORDS.clear()
+    RETIMERS.clear()
+    out = _kernel_rows()
     out.extend(_emulation_rows())
     return out
+
+
+def run_quick():
+    """``kernel/*`` records only — subsecond; ``benchmarks.run --quick``."""
+    RECORDS.clear()
+    RETIMERS.clear()
+    return _kernel_rows()

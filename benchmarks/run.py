@@ -5,9 +5,15 @@ perf baseline: op, shape, wall-time, plane-count scaling).
 
 Perf-regression gate: before refreshing the baseline, every new record is
 diffed against the previous ``BENCH_kernels.json`` — any recorded op that
-got more than ``REGRESSION_THRESHOLD`` x slower is flagged on stderr and
-listed under ``notes.regressions`` in the refreshed file, so a later PR's
-run makes its own slowdowns visible.
+got more than ``REGRESSION_THRESHOLD`` x slower is re-timed (median of 3
+via ``kernel_bench.RETIMERS``, rejecting transient host-load spikes like
+the known ``kernel/f32_dot`` flap) and, if the slowdown survives, flagged
+on stderr and listed under ``notes.regressions`` in the refreshed file,
+so a later PR's run makes its own slowdowns visible.
+
+``--quick`` runs only the subsecond ``kernel/*`` subset through the same
+diff-vs-baseline gate (no baseline rewrite, no slow-test gate) — a CI
+pre-check; ``tests/test_bench_quick.py`` keeps it working.
 
 Slow-test gate: tier-1 (`pytest -x -q`) deselects the ``slow``-marked
 end-to-end reduced-Inception and serving tests (pytest.ini); this harness
@@ -95,6 +101,46 @@ def diff_records(old_payload: dict | None, records: list[dict],
     return regressions
 
 
+def harden_regressions(regressions: list[dict], records: list[dict],
+                       retimers: dict,
+                       threshold: float = REGRESSION_THRESHOLD) -> list[dict]:
+    """Re-time each flagged op (median of 3 fresh measurements) before
+    recording it as a regression.
+
+    The known flap: ``kernel/f32_dot`` (pure XLA, untouched across PRs)
+    drifts >1.3x between back-to-back runs on this shared container
+    (SPEEDUP_NOTES["host_noise"]) — a transient host-load spike during its
+    original min-of-15 window.  A median re-measure moments later rejects
+    the spike: the op keeps ``min(original, median)`` as its recorded
+    time, and the regression survives only if that still clears the
+    threshold (then it is stamped ``retimed: True`` so the baseline shows
+    the flag was confirmed, not ambient).  Ops without a registered
+    retimer (the multi-second emulation records) pass through unchanged —
+    re-running those would double the bench wall time."""
+    import statistics
+    by_op = {r["op"]: r for r in records}
+    confirmed = []
+    for reg in regressions:
+        retime = retimers.get(reg["op"])
+        if retime is None:
+            confirmed.append(reg)
+            continue
+        med = statistics.median([retime() for _ in range(3)])
+        best = round(min(reg["after_us"], med), 2)
+        rec = by_op.get(reg["op"])
+        if rec is not None:
+            rec["us_per_call"] = best
+        if best > threshold * reg["before_us"]:
+            confirmed.append(dict(reg, after_us=best,
+                                  ratio=round(best / reg["before_us"], 2),
+                                  retimed=True))
+        else:
+            print(f"# retime cleared {reg['op']}: flagged "
+                  f"{reg['after_us']:.1f} us, median-of-3 {med:.1f} us "
+                  f"(baseline {reg['before_us']:.1f} us)", file=sys.stderr)
+    return confirmed
+
+
 def _dump_kernel_records() -> None:
     try:
         from benchmarks import kernel_bench
@@ -107,7 +153,8 @@ def _dump_kernel_records() -> None:
         previous = json.loads(BENCH_JSON.read_text())
     except Exception:
         previous = None
-    regressions = diff_records(previous, records)
+    regressions = harden_regressions(diff_records(previous, records),
+                                     records, kernel_bench.RETIMERS)
     for reg in regressions:
         print(f"# PERF REGRESSION {reg['op']}: {reg['before_us']:.1f} us -> "
               f"{reg['after_us']:.1f} us ({reg['ratio']}x)", file=sys.stderr)
@@ -131,7 +178,47 @@ def _run_slow_gate() -> bool:
     return res.returncode in (0, 5)  # 5: no slow tests collected
 
 
+def _run_quick() -> int:
+    """``--quick``: the subsecond ``kernel/*`` subset only, diffed against
+    the committed ``BENCH_kernels.json`` with the same retime-hardened
+    regression gate as a full run.  Never rewrites the baseline (a partial
+    record set must not masquerade as one) and skips the slow-test gate —
+    a CI pre-check that finishes in seconds."""
+    from benchmarks import kernel_bench
+    print("name,us_per_call,derived")
+    try:
+        for line in kernel_bench.run_quick():
+            print(line)
+    except Exception:  # pragma: no cover - harness robustness
+        traceback.print_exc(file=sys.stderr)
+        return 1
+    try:
+        previous = json.loads(BENCH_JSON.read_text())
+    except Exception:
+        previous = None
+    regressions = harden_regressions(
+        diff_records(previous, kernel_bench.RECORDS),
+        kernel_bench.RECORDS, kernel_bench.RETIMERS)
+    for reg in regressions:
+        print(f"# PERF REGRESSION {reg['op']}: {reg['before_us']:.1f} us -> "
+              f"{reg['after_us']:.1f} us ({reg['ratio']}x)", file=sys.stderr)
+    print(f"# quick mode: {len(kernel_bench.RECORDS)} kernel records "
+          f"diffed, {len(regressions)} regressions; baseline not "
+          f"rewritten", file=sys.stderr)
+    return 0
+
+
 def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="benchmark harness; see module docstring")
+    ap.add_argument("--quick", action="store_true",
+                    help="subsecond kernel/* subset with the same "
+                         "diff-vs-baseline regression gate; no baseline "
+                         "rewrite, no slow-test gate")
+    args = ap.parse_args()
+    if args.quick:
+        sys.exit(_run_quick())
     print("name,us_per_call,derived")
     failures = 0
     ok = set()

@@ -1151,7 +1151,8 @@ def _dot_words_decoded(xw, ww, *, K: int, acc_bits: int):
     return s.reshape(prod.shape[:-2] + (prod.shape[-2] * r,))
 
 
-def packed_dot_words(xw, ww, *, K: int, acc_bits: int, engine: str = "host"):
+def packed_dot_words(xw, ww, *, K: int, acc_bits: int, engine: str = "host",
+                     materialize: bool = True):
     """Fused row-aligned dot: ``sum_k x[row, k] * w[row, k]`` per row.
 
     ``xw``/``ww`` are word arrays of shape ``(n_planes, *grid, row_words)``
@@ -1175,6 +1176,15 @@ def packed_dot_words(xw, ww, *, K: int, acc_bits: int, engine: str = "host"):
     instead when the int32 decode could overflow (operand widths and K
     such that the maximum row sum reaches 2^31 without
     ``jax_enable_x64``).
+
+    ``materialize=False`` skips the blocking device->host copy on the jit
+    path and returns the dispatched device array instead: XLA's
+    asynchronous dispatch lets the caller keep packing the NEXT tile's
+    operands while this tile computes — the §IV-E double-buffered engine
+    in core/nc_layers.py defers ``np.asarray`` by one tile.  Values are
+    identical either way; the host path (and the int32-overflow fallback)
+    is synchronous, so the flag only changes WHEN the copy happens, never
+    what it holds.
     """
     n_bits = max(xw.shape[0], ww.shape[0])
     cycles = dot_cycles(K, n_bits, acc_bits)
@@ -1189,7 +1199,8 @@ def packed_dot_words(xw, ww, *, K: int, acc_bits: int, engine: str = "host"):
             fn = jax.jit(functools.partial(_dot_words_decoded, K=K,
                                            acc_bits=acc_bits))
             _ENGINE_CACHE[key] = fn
-        return np.asarray(fn(jnp.asarray(xw), jnp.asarray(ww))), cycles
+        out = fn(jnp.asarray(xw), jnp.asarray(ww))
+        return (np.asarray(out) if materialize else out), cycles
     return _dot_words_impl(xw, ww, K=K, acc_bits=acc_bits), cycles
 
 

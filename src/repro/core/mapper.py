@@ -93,6 +93,21 @@ def serial_passes_for(work: int, parallel: int) -> int:
     return max(1, math.ceil(work / max(parallel, 1)))
 
 
+def pass_filter_bytes(filter_bytes: int, passes: int) -> int:
+    """Filter bytes streamed per serialized pass when a layer's load is
+    spread over its pass sequence (§IV-E double buffering) — 0 when the
+    layer loads nothing.
+
+    The ONE per-pass filter-streaming rule shared by core/schedule.py's
+    overlap-legality decision (does one pass's worth of columns fit the
+    reserved I/O way?) and core/simulator.py's prologue pricing (the first
+    pass's load can never hide), so scheduler and simulator can never
+    disagree on how a layer's filter bytes split across passes."""
+    if filter_bytes <= 0:
+        return 0
+    return math.ceil(filter_bytes / max(passes, 1))
+
+
 @dataclasses.dataclass(frozen=True)
 class MappedLayer:
     spec: LayerSpec

@@ -94,6 +94,7 @@ class ConvStats:
     filter_loads: int = 1  # times the filter word grid was packed (§VI-C: 1/batch)
     zero_filters: int = 0  # all-zero filters the sparse plan pruned
     skipped_passes: int = 0  # serialized passes the plan dropped (per image)
+    overlap: bool = False  # §IV-E double buffering ran (prefetch + deferred store)
 
 
 def nc_dot(x_q, w_q, acc_bits: int = 24, n_bits: int = 8):
@@ -232,6 +233,7 @@ def nc_conv2d(
     plan: sched.SlicePlan | None = None,
     occupancy: sched.LayerOccupancy | str | None = None,
     engine: str = "host",
+    overlap: bool = False,
     return_stats: bool = False,
 ):
     """Quantized conv through the array model (packed-resident + tiled).
@@ -275,6 +277,18 @@ def nc_conv2d(
     against the actual weights (a filter it marks zero must BE zero —
     under-claiming sparsity is allowed, over-claiming raises).  Dense
     plans (no occupancy) behave exactly as before.
+
+    §IV-E double buffering (``overlap=True``, or a plan that granted it):
+    the engine runs the plan's explicit (load, compute) stage split —
+    while tile k's MAC+reduce is in flight (the bucketed-jit dispatch is
+    asynchronous), the host packs tile k+1's filter columns and window
+    rows (the load stage), and tile k-1's finished result is retired; the
+    device->host copy is deferred by exactly one tile (depth-1 pipeline,
+    matching the single prefetch buffer the reserved I/O way has headroom
+    for).  Results are byte-identical to the serial path — the flag only
+    reorders WHEN packing and copies happen.  Like sparsity, overlap is a
+    plan decision: requesting ``overlap=True`` alongside an explicit plan
+    raises (the plan already decided).
     """
     xin = np.asarray(x)
     batched = xin.ndim == 4
@@ -320,6 +334,10 @@ def nc_conv2d(
         raise ValueError("pass sparsity through the plan's occupancy, or "
                          "let nc_conv2d plan (occupancy= with an explicit "
                          "plan is ambiguous)")
+    if overlap and not replan:
+        raise ValueError("request overlap through the plan "
+                         "(plan_layer(..., overlap=True)); overlap= with "
+                         "an explicit plan is ambiguous")
     if replan:
         occ = occupancy
         if isinstance(occ, str):
@@ -328,10 +346,13 @@ def nc_conv2d(
                                  f"'detect' or None, got {occ!r}")
             occ = sched.LayerOccupancy.from_filter_rows(
                 w_rows, w_qp.bits, zw_int)
-        if occ is None and plan is not None:
-            occ = plan.occupancy  # tile overrides must not drop sparsity
+        if plan is not None:
+            if occ is None:
+                occ = plan.occupancy  # tile overrides must not drop sparsity
+            overlap = overlap or plan.overlap  # ... nor drop double buffering
         plan = sched.plan_layer(spec, geom, batch=B, tile_pixels=tile_pixels,
-                                tile_filters=tile_filters, occupancy=occ)
+                                tile_filters=tile_filters, occupancy=occ,
+                                overlap=overlap)
     tile_rows = max(1, min(plan.tile_rows, rows_total))
     tile_filters = max(1, min(plan.tile_filters, M))
 
@@ -358,8 +379,12 @@ def nc_conv2d(
 
     w_rows_live = w_rows if live_idx is None else w_rows[live_idx]
     M_live = w_rows_live.shape[0]
-    # filters packed once per layer per batch; tiles slice the word grid
-    ww_all = _pack_w_rows(w_rows_live, w_qp.bits) if M_live else None
+    overlap_exec = bool(plan.overlap)
+    # filters packed once per layer per batch; tiles slice the word grid.
+    # Under §IV-E double buffering the pack is deferred to the per-tile
+    # load stage instead (each tile's columns still pack exactly once).
+    ww_all = (_pack_w_rows(w_rows_live, w_qp.bits)
+              if M_live and not overlap_exec else None)
 
     skip0_words = bs.SKIP_STATS.words_total
     skip0_skipped = bs.SKIP_STATS.words_skipped
@@ -371,25 +396,71 @@ def nc_conv2d(
     # (and any other layer landing on the same bucket)
     bt = bs.bucket_words(tile_rows) if engine == "jit" else tile_rows
     bf = bs.bucket_words(tile_filters) if engine == "jit" else None
-    for p0 in range(0, rows_total if M_live else 0, tile_rows):
-        p1 = min(p0 + tile_rows, rows_total)
-        rows = win_flat[p0:p1]
-        if engine == "jit" and rows.shape[0] < bt:
-            rows = np.pad(rows, ((0, bt - rows.shape[0]), (0, 0)))
-        xw = _pack_x_rows(rows, x_qps[0].bits)
-        for m0 in range(0, M_live, tile_filters):
-            m1 = min(m0 + tile_filters, M_live)
-            ww = ww_all[:, m0:m1]
+    p_tiles = ([(p0, min(p0 + tile_rows, rows_total))
+                for p0 in range(0, rows_total, tile_rows)] if M_live else [])
+    m_tiles = [(m0, min(m0 + tile_filters, M_live))
+               for m0 in range(0, M_live, tile_filters)]
+    w_cache: dict[int, np.ndarray] = {}
+    x_cache: dict[int, np.ndarray] = {}
+
+    def _filter_tile(mi: int) -> np.ndarray:
+        """Load stage: one pass's packed filter columns (§VI-C: each
+        tile's columns pack exactly once per layer per batch)."""
+        ww = w_cache.get(mi)
+        if ww is None:
+            m0, m1 = m_tiles[mi]
+            ww = (ww_all[:, m0:m1] if ww_all is not None
+                  else _pack_w_rows(w_rows_live[m0:m1], w_qp.bits))
             if engine == "jit" and m1 - m0 < bf:
                 pad = ((0, 0), (0, bf - (m1 - m0))) + ((0, 0),) * (ww.ndim - 2)
                 ww = np.pad(ww, pad)
-            vals, _ = bs.packed_dot_words(xw, ww, K=K, acc_bits=acc_bits,
-                                          engine=engine)
-            vals = np.asarray(vals)  # (Mt, T[, expanded rows])
-            sel = (slice(m0, m1) if live_idx is None
-                   else live_idx[m0:m1])
-            out[p0:p1, sel] = vals[: m1 - m0, : p1 - p0].T
-            n_tiles += 1
+            w_cache[mi] = ww
+        return ww
+
+    def _x_tile(pi: int) -> np.ndarray:
+        xw = x_cache.get(pi)
+        if xw is None:
+            p0, p1 = p_tiles[pi]
+            rows = win_flat[p0:p1]
+            if engine == "jit" and rows.shape[0] < bt:
+                rows = np.pad(rows, ((0, bt - rows.shape[0]), (0, 0)))
+            xw = _pack_x_rows(rows, x_qps[0].bits)
+            x_cache[pi] = xw
+        return xw
+
+    def _store(vals, pi: int, mi: int) -> None:
+        p0, p1 = p_tiles[pi]
+        m0, m1 = m_tiles[mi]
+        v = np.asarray(vals)  # (Mt, T[, expanded rows]); blocks on jit
+        sel = slice(m0, m1) if live_idx is None else live_idx[m0:m1]
+        out[p0:p1, sel] = v[: m1 - m0, : p1 - p0].T
+
+    order = [(pi, mi) for pi in range(len(p_tiles))
+             for mi in range(len(m_tiles))]
+    pending = None  # §IV-E double buffer: one dispatched tile in flight
+    for t, (pi, mi) in enumerate(order):
+        for stale in [k for k in x_cache if k < pi]:
+            del x_cache[stale]  # row tiles behind the pipeline are done
+        vals, _ = bs.packed_dot_words(
+            _x_tile(pi), _filter_tile(mi), K=K, acc_bits=acc_bits,
+            engine=engine, materialize=not overlap_exec)
+        n_tiles += 1
+        if not overlap_exec:
+            _store(vals, pi, mi)
+            continue
+        # tile t's MAC+reduce is in flight (asynchronous dispatch): run
+        # tile t+1's load stage NOW — pack the next pass's filter columns
+        # and window rows while t computes — then retire tile t-1, whose
+        # result the device finished before starting t
+        if t + 1 < len(order):
+            npi, nmi = order[t + 1]
+            _filter_tile(nmi)
+            _x_tile(npi)
+        if pending is not None:
+            _store(*pending)
+        pending = (vals, pi, mi)
+    if pending is not None:
+        _store(*pending)
     if zero_mask is not None:
         # pruned passes: an all-zero filter's dot is the affine constant
         # zw * sum_k(x_k) — exact, no engine lanes clocked for it
@@ -428,6 +499,7 @@ def nc_conv2d(
         filter_loads=1,
         zero_filters=M - M_live,
         skipped_passes=plan.skipped_passes,
+        overlap=overlap_exec,
     )
     return result, total_cycles, stats
 

@@ -95,10 +95,11 @@ import numpy as np
 from repro.core import bitserial as bs
 from repro.core.cache_geometry import CacheGeometry, XEON_E5_35MB
 from repro.core.mapper import (LayerSpec, MappedLayer, check_wordline_budget,
-                               map_layer, serial_passes_for)
+                               map_layer, pass_filter_bytes,
+                               serial_passes_for)
 
-__all__ = ["LayerOccupancy", "SlicePlan", "NetworkSchedule", "conv_tiles",
-           "plan_layer", "plan_network", "prune_occupancy"]
+__all__ = ["LayerOccupancy", "PassStage", "SlicePlan", "NetworkSchedule",
+           "conv_tiles", "plan_layer", "plan_network", "prune_occupancy"]
 
 ACC_BITS = 32  # reserved-way staging width of a conv partial sum
 
@@ -192,6 +193,23 @@ class LayerOccupancy:
 
 
 @dataclasses.dataclass(frozen=True)
+class PassStage:
+    """One serialized pass split into its explicit (load, compute) stages.
+
+    ``load_bytes`` is the slice of the layer's filter columns streamed into
+    the reserved I/O way for THIS pass; ``overlapped`` marks loads that
+    stream while the PREVIOUS pass's MAC+reduce runs in the compute ways
+    (§IV-E double buffering).  The first stage's load is the prologue — it
+    has no predecessor to hide under, so it is never overlapped.  Quant
+    passes and the min/max reduction are not stages: they stay on the
+    serial tail (§IV-D lockstep needs the full output set staged)."""
+
+    index: int  # serialized pass index per image, 0-based
+    load_bytes: int  # filter bytes streamed for this pass's columns
+    overlapped: bool  # load hidden under pass index-1's MAC+reduce
+
+
+@dataclasses.dataclass(frozen=True)
 class SlicePlan:
     """One layer's execution plan (see the module docstring field map).
 
@@ -241,6 +259,10 @@ class SlicePlan:
     # occupancy=None <=> dense plan, numbers above untouched
     occupancy: LayerOccupancy | None = None
     skipped_passes: int = 0  # serialized passes dropped (zero filters), /image
+    # §IV-E double buffering (see PassStage); overlap=False plans and their
+    # consumers are bit-identical to the strictly serial PR 3/4 behavior
+    filter_bytes_per_pass: int = 0  # ONE pass's filter columns (live set)
+    overlap: bool = False  # pass k+1's load streams under pass k's compute
 
     @property
     def is_compute(self) -> bool:
@@ -252,6 +274,24 @@ class SlicePlan:
         §IV-B count minus the skipped-pass credit."""
         return self.serial_passes - self.skipped_passes
 
+    def pass_stages(self) -> tuple[PassStage, ...]:
+        """The layer's serialized passes as explicit (load, compute) stages
+        — one :class:`PassStage` per executed pass, loads chunked by the
+        mapper's ONE streaming rule (``mapper.pass_filter_bytes``) so they
+        sum to ``filter_bytes`` exactly.  Stage 0 is the un-hideable
+        prologue; stages 1+ are overlapped iff the plan decided overlap is
+        legal.  Pool layers (no filters, no passes to buffer) have no
+        stages."""
+        if not self.is_compute:
+            return ()
+        chunk = self.filter_bytes_per_pass
+        stages = []
+        for k in range(self.executed_passes):
+            load = max(0, min(chunk, self.filter_bytes - k * chunk))
+            stages.append(PassStage(index=k, load_bytes=load,
+                                    overlapped=self.overlap and k > 0))
+        return tuple(stages)
+
 
 def plan_layer(spec: LayerSpec,
                geom: CacheGeometry = XEON_E5_35MB,
@@ -259,7 +299,8 @@ def plan_layer(spec: LayerSpec,
                *,
                tile_pixels: int | None = None,
                tile_filters: int | None = None,
-               occupancy: LayerOccupancy | None = None) -> SlicePlan:
+               occupancy: LayerOccupancy | None = None,
+               overlap: bool = False) -> SlicePlan:
     """Map one layer (§IV-A/B) and schedule it for ``batch`` images.
 
     ``occupancy`` makes value sparsity an input to the plan: passes whose
@@ -267,6 +308,18 @@ def plan_layer(spec: LayerSpec,
     exact cycle credit by the simulator) and pruned filters are not loaded
     (``filter_bytes`` shrinks to the live set).  ``occupancy=None`` plans
     are field-for-field identical to the dense plan.
+
+    ``overlap=True`` *requests* §IV-E double buffering: stream pass k+1's
+    filter columns into the reserved I/O way while pass k's MAC+reduce
+    runs.  The per-layer decision (``SlicePlan.overlap``) grants it only
+    when it is legal — the layer is multi-pass compute with filters to
+    load, and ONE pass's columns (``mapper.pass_filter_bytes`` over the
+    live pass sequence) fit the I/O way's output half alongside the staged
+    per-image outputs.  The headroom reuses the §IV-E spill accounting:
+    spilling layers stage outputs in DRAM, so the full output half is
+    prefetch headroom; non-spilling layers keep outputs staged and the
+    prefetch buffer gets what is left.  Quant passes and min/max always
+    stay on the serial tail.
 
     Invariants the tests pin down (tests/test_sparsity.py):
 
@@ -318,6 +371,14 @@ def plan_layer(spec: LayerSpec,
     # spills once its per-image output exceeds a quarter of the I/O way.
     cap = geom.io_way_bytes / 2
     spill = spec.output_bytes > cap / 2
+    # §IV-E double buffering: one pass's filter columns must fit the output
+    # half of the reserved way next to whatever outputs stay staged there
+    # (spilled outputs live in DRAM and free the whole half for prefetch)
+    executed = mapped.serial_passes - skipped
+    fb_per_pass = pass_filter_bytes(filter_bytes, executed)
+    headroom = cap - (0 if spill else spec.output_bytes)
+    ov = (overlap and spec.kind in ("conv", "fc") and executed > 1
+          and filter_bytes > 0 and fb_per_pass <= headroom)
     return SlicePlan(
         spec=spec, mapped=mapped, batch=batch,
         K=K, row_bits=bs._row_layout(K)[0],
@@ -333,6 +394,8 @@ def plan_layer(spec: LayerSpec,
         minmax_cycles=minmax,
         occupancy=occupancy,
         skipped_passes=skipped,
+        filter_bytes_per_pass=fb_per_pass,
+        overlap=ov,
     )
 
 
@@ -352,6 +415,7 @@ class NetworkSchedule:
     layers: tuple[SlicePlan, ...]
     geom: CacheGeometry
     batch: int
+    overlap: bool = False  # §IV-E double buffering requested for the net
 
     def plan(self, name: str) -> SlicePlan:
         for p in self.layers:
@@ -381,6 +445,12 @@ class NetworkSchedule:
         return sum(p.skipped_passes for p in self.layers)
 
     @property
+    def overlapped_layers(self) -> int:
+        """Layers whose per-pass filter loads stream under the previous
+        pass's MAC+reduce (granted §IV-E double buffering)."""
+        return sum(1 for p in self.layers if p.overlap)
+
+    @property
     def stream_batch_limit(self) -> int:
         """Images the reserved I/O way can stage at once for the widest
         layer (inputs + outputs share the way) — the §VI-C streaming
@@ -400,13 +470,17 @@ def plan_network(specs: Sequence[LayerSpec] | Iterable[LayerSpec],
                  geom: CacheGeometry = XEON_E5_35MB,
                  batch: int = 1,
                  occupancy: Mapping[str, LayerOccupancy] | None = None,
+                 overlap: bool = False,
                  ) -> NetworkSchedule:
     """Plan a network.  ``occupancy`` maps layer names to their
-    :class:`LayerOccupancy` (layers absent from the map plan dense)."""
+    :class:`LayerOccupancy` (layers absent from the map plan dense);
+    ``overlap`` requests §IV-E double buffering for every layer (granted
+    per layer by :func:`plan_layer`'s legality rule)."""
     occupancy = occupancy or {}
     return NetworkSchedule(
-        tuple(plan_layer(s, geom, batch, occupancy=occupancy.get(s.name))
-              for s in specs), geom, batch)
+        tuple(plan_layer(s, geom, batch, occupancy=occupancy.get(s.name),
+                         overlap=overlap)
+              for s in specs), geom, batch, overlap)
 
 
 def prune_occupancy(specs: Iterable[LayerSpec], fraction: float = 0.5,

@@ -131,6 +131,10 @@ class LayerResult:
     compute_cycles_per_pass: float
     energy_j: float
     plan: SlicePlan | None = None  # the schedule entry this result priced
+    # §IV-E double buffering (plan.overlap): the first pass's filter columns
+    # have no predecessor to hide under
+    prologue_s: float = 0.0  # un-hideable load of pass 0's filter columns
+    overlap: bool = False
 
     @property
     def compute_s(self) -> float:
@@ -139,6 +143,26 @@ class LayerResult:
     @property
     def total_s(self) -> float:
         return self.compute_s + self.filter_s + self.input_s + self.output_s
+
+    @property
+    def hidden_s(self) -> float:
+        """Filter-load seconds hidden under MAC+reduce when the plan
+        granted §IV-E double buffering — the layer's overlapped filter cost
+        is ``prologue + max(filter_s - prologue, mac_s + reduce_s)`` in
+        place of the serial ``filter_s + mac_s + reduce_s``, so the credit
+        is ``min(filter_s - prologue_s, mac_s + reduce_s)``.
+
+        The cap is ONE image's MAC+reduce even in a batch: layer-serial
+        §IV-E streams image 1's pass sequence first, and pass k's columns
+        must land before pass k consumes them, so every load has to
+        interleave into the FIRST image's passes (images 2..N then run
+        fully resident).  The credit is therefore batch-independent, which
+        keeps ``batch_time_s`` strictly increasing in the batch.  Zero
+        when overlap is off — serial pricing is bit-identical."""
+        if not self.overlap:
+            return 0.0
+        return min(max(self.filter_s - self.prologue_s, 0.0),
+                   self.mac_s + self.reduce_s)
 
 
 def _fresh_input_fraction(spec: LayerSpec) -> float:
@@ -219,8 +243,14 @@ def simulate_layer(
         + filter_bytes * (const.dram_pj_per_byte + const.bus_pj_per_byte) * 1e-12
         + (input_stream + spec.output_bytes) * const.bus_pj_per_byte * 1e-12
     )
+    # §IV-E double buffering: pass k+1's filter columns stream while pass
+    # k's MAC+reduce runs; only the first pass's chunk is un-hideable
+    overlap = plan.overlap
+    prologue_s = (plan.filter_bytes_per_pass / const.filter_bw
+                  if overlap else 0.0)
     return LayerResult(spec, m, mac_s, reduce_s, quant_s, 0.0, filter_s,
-                       input_s, output_s, per_conv, energy, plan)
+                       input_s, output_s, per_conv, energy, plan,
+                       prologue_s=prologue_s, overlap=overlap)
 
 
 def modeled_layer_cycles(
@@ -241,7 +271,14 @@ def modeled_layer_cycles(
     covers only the executed passes and ``skip_credit_cycles`` is the
     exact credit — ``dense_total - sparse_total == skip_credit_cycles``
     holds to the cycle (same per-pass cost, the occupancy never changes
-    the mapped layout)."""
+    the mapped layout).
+
+    Overlap (§IV-E double buffering) never changes the compute cycles —
+    it re-times the filter LOAD against them — so ``total_cycles`` is
+    overlap-invariant; the hidden-load credit is reported in seconds
+    (``hidden_s``, with the un-hideable ``prologue_s``) and
+    ``overlapped_total_s = total_s - hidden_s`` is the layer's §IV-E
+    double-buffered wall time (== ``total_s`` when overlap is off)."""
     res = simulate_layer(spec, geom, const)
     per_pass = res.compute_cycles_per_pass
     passes = res.mapped.serial_passes
@@ -254,6 +291,10 @@ def modeled_layer_cycles(
         total_cycles=per_pass * (passes - skipped),
         compute_s=res.compute_s,
         total_s=res.total_s,
+        overlap=res.overlap,
+        prologue_s=res.prologue_s,
+        hidden_s=res.hidden_s,
+        overlapped_total_s=res.total_s - res.hidden_s,
     )
 
 
@@ -302,8 +343,23 @@ class NetworkResult:
         return self.compute_s + self.input_s + self.output_s
 
     @property
+    def hidden_s(self) -> float:
+        """Filter-load seconds hidden under MAC+reduce across the network
+        (§IV-E double buffering; zero for overlap-off schedules).
+        Batch-independent — see :attr:`LayerResult.hidden_s`."""
+        return sum(l.hidden_s for l in self.layers)
+
+    @property
     def latency_s(self) -> float:
         return self.filter_s + self.marginal_s
+
+    @property
+    def overlapped_latency_s(self) -> float:
+        """Single-image latency with the schedule's §IV-E double buffering
+        applied: per layer, ``prologue + max(load_rest, mac+reduce)``
+        instead of ``load + mac + reduce``.  Equals :attr:`latency_s` when
+        overlap is off."""
+        return self.latency_s - self.hidden_s
 
     @property
     def energy_j(self) -> float:
@@ -370,16 +426,23 @@ def batch_time_s(result: NetworkResult, batch: int) -> float:
     """Modeled time to process ONE admitted batch of ``batch`` images,
     layer-serially (§IV-E):
 
-    total(N) = filter_load + N * marginal + N * spill  (spill only when the
-    batch outgrows the reserved way, i.e. N >= 2).
+    total(N) = filter_load + N * marginal + N * spill - hidden  (spill only
+    when the batch outgrows the reserved way, i.e. N >= 2; ``hidden`` is
+    the schedule's §IV-E double-buffering credit — per layer the filter
+    cost collapses from ``load + mac + reduce`` to
+    ``prologue + max(load_rest, mac + reduce)``, and the credit is
+    batch-independent because every load must land inside the FIRST
+    image's pass sequence — see :attr:`LayerResult.hidden_s`).
 
     This is the per-batch latency the serving admission policy predicts
     against (core/slo.py): strictly increasing in ``batch`` (marginal and
-    spill are per-image costs), with the filter load amortizing — the
-    latency/throughput trade the SLO knob walks.  ``throughput`` is its
-    reciprocal view."""
+    spill are per-image costs, the hidden credit a constant), with the
+    filter load amortizing — the latency/throughput trade the SLO knob
+    walks.  Overlap-off schedules price bit-identically to the serial
+    PR 3/4 model (``hidden == 0``).  ``throughput`` is its reciprocal
+    view."""
     spill = result.spill_s_per_image() if batch > 1 else 0.0
-    return result.filter_s + batch * (result.marginal_s + spill)
+    return result.filter_s + batch * (result.marginal_s + spill) - result.hidden_s
 
 
 def throughput(result: NetworkResult, batch: int, sockets: int = 2) -> float:

@@ -12,7 +12,11 @@ Two pieces:
 
 * :class:`LatencyModel` — converts a :class:`~repro.core.schedule.
   NetworkSchedule`'s modeled cycles (priced by ``simulator.batch_time_s``:
-  filter load once per batch + per-image marginal + §IV-E spill) into a
+  filter load once per batch + per-image marginal + §IV-E spill, minus the
+  filter-load time hidden by double-buffered plans — schedules planned
+  with ``overlap=True`` automatically price the overlapped pipeline, so
+  the serving engine's default plans calibrate against overlapped
+  predictions with no changes here) into a
   predicted wall-latency curve ``latency(batch)``.  The modeled number is
   hardware time; the emulation (or a real deployment) runs at some
   process-dependent multiple of it, so the model *calibrates*: every

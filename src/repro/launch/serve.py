@@ -187,6 +187,14 @@ class NCServingEngine(BatchQueueEngine):
     serving an EIE-style pruned model gets the cycle and wall-time win for
     free.  Unpruned weights detect zero sparsity and plan exactly dense.
 
+    ``overlap=True`` (the default) plans every batch size double-buffered
+    (ISSUE 6 / §IV-E): serialized passes whose next filter columns fit the
+    reserved I/O way stream those columns under the previous pass's
+    MAC+reduce, so ``simulator.batch_time_s`` — and therefore the
+    ``LatencyModel`` below — prices the overlapped pipeline the engine
+    actually executes.  ``overlap=False`` restores the PR 3/4 serial
+    plans bit-for-bit.
+
     ``slo_ms`` arms the SLO-aware admission policy (core/slo.py): instead
     of greedy FIFO-up-to-``max_batch``, each ``step()`` asks the policy
     for the largest batch whose predicted p99 latency (from the
@@ -209,8 +217,8 @@ class NCServingEngine(BatchQueueEngine):
 
     def __init__(self, params, config=None, *, max_batch: int = 4,
                  geom=None, engine: str | None = None, sparse: bool = True,
-                 slo_ms: float | None = None, hold_slack_ms: float | None = None,
-                 now_fn=time.monotonic):
+                 overlap: bool = True, slo_ms: float | None = None,
+                 hold_slack_ms: float | None = None, now_fn=time.monotonic):
         from repro.core import schedule as nc_schedule
         from repro.core import slo as nc_slo
         from repro.core.cache_geometry import XEON_E5_35MB
@@ -231,9 +239,11 @@ class NCServingEngine(BatchQueueEngine):
         self.wpack = inception.prepare_conv_weights(params, self.config)
         self.occupancy = (inception.network_occupancy(self.wpack, self.config)
                           if sparse else None)
+        self.overlap = overlap
         self.schedule = self._plan_network(self.specs, self.geom,
                                            batch=max_batch,
-                                           occupancy=self.occupancy)
+                                           occupancy=self.occupancy,
+                                           overlap=self.overlap)
         self._schedules = {max_batch: self.schedule}
         self.reports = []
         # SLO control loop: the latency model prices the SAME plan objects
@@ -255,7 +265,8 @@ class NCServingEngine(BatchQueueEngine):
         if n not in self._schedules:
             self._schedules[n] = self._plan_network(self.specs, self.geom,
                                                     batch=n,
-                                                    occupancy=self.occupancy)
+                                                    occupancy=self.occupancy,
+                                                    overlap=self.overlap)
         return self._schedules[n]
 
     def submit(self, req, now: float | None = None) -> None:
@@ -343,6 +354,7 @@ def _main_neural_cache(args) -> int:
     cfg = inception.reduced_config()
     params = inception.init_params(jax.random.key(0), config=cfg)
     engine = NCServingEngine(params, cfg, max_batch=args.max_batch,
+                             overlap=not args.no_overlap,
                              slo_ms=args.slo_ms)
     rng = np.random.default_rng(0)
     for r in range(args.requests):
@@ -383,6 +395,10 @@ def main() -> int:
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="plan --neural-cache batches serial (no filter "
+                         "streaming under MAC+reduce); default plans are "
+                         "double-buffered per §IV-E headroom")
     ap.add_argument("--slo-ms", type=float, default=None,
                     help="per-request latency SLO for --neural-cache: "
                          "batches are sized by the predicted p99 from the "

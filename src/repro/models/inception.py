@@ -402,6 +402,7 @@ class NCLayerReport:
     filter_loads: int = 0  # filter packs this batch (§VI-C residency: 1)
     skipped_passes: int = 0  # zero-filter passes the sparse plan dropped
     zero_filters: int = 0  # pruned filters the engine never ran
+    overlap: bool = False  # §IV-E double buffering granted and executed
 
 
 @dataclasses.dataclass(frozen=True)
@@ -612,7 +613,7 @@ def _nc_run_conv(name, actq, act_qps, op, wpack, spec, plan, geom, const,
         lanes=stats.lanes, zero_operand_lanes=stats.zero_operand_lanes,
         batch=B, minmax_cycles=int(c_mm), filter_loads=stats.filter_loads,
         skipped_passes=modeled["skipped_passes"],
-        zero_filters=stats.zero_filters))
+        zero_filters=stats.zero_filters, overlap=stats.overlap))
     return yq, out_qps
 
 
@@ -678,6 +679,91 @@ def _nc_apply_op(actq, act_qps, name, op, wpack, specs, plans, geom, const,
     raise ValueError(op)
 
 
+def _nc_stage_gen(x4, config, wpack, specs, plans, geom, const, engine,
+                  records, state):
+    """Generator over the network's serial stages (§IV-E layer order): one
+    yield per stem op, per mixed block, and for the final pool + FC.
+
+    This is the hook for cross-layer streaming: ``nc_forward`` drains one
+    generator straight through for a normal run, while ``stream_chunk``
+    advances several chunk generators in a skewed wavefront (chunk i at
+    stage t while chunk i+1 runs stage t-1 — layer L of one image set
+    computes while the next set's layer L-1 loads).  ``state["logits"]``
+    holds the float logits after exhaustion."""
+    B = x4.shape[0]
+    # §IV-D input quantization: images arrive as uint8 pixels — a static
+    # [0, 1] range, no min/max ever computed on an activation tensor.
+    actq = np.clip(np.round(x4 * np.float32(255.0)), 0, 255).astype(np.uint8)
+    act_qps = [q.QuantParams(scale=np.float32(1.0 / 255.0), zero_point=0)] * B
+    for name, op in config.stem:
+        actq, act_qps = _nc_apply_op(actq, act_qps, name, op, wpack, specs,
+                                     plans, geom, const, engine, records,
+                                     state)
+        yield name
+    for bname, branches in config.mixed:
+        outs = []
+        for bi, branch in enumerate(branches):
+            yq, qps = actq, act_qps
+            for oi, op in enumerate(branch):
+                yq, qps = _nc_apply_op(yq, qps, f"{bname}_b{bi}_{oi}", op,
+                                       wpack, specs, plans, geom, const,
+                                       engine, records, state)
+            outs.append((yq, qps))
+        actq, act_qps = _nc_concat(outs, state)
+        yield bname
+    # global average pool through the array, then FC as a 1x1 conv
+    h = actq.shape[1]
+    actq, act_qps = _nc_run_pool("AvgPool", actq, act_qps,
+                                 ("avgpool", h, 1, "VALID"),
+                                 specs["AvgPool"], geom, const, records)
+    actq = actq.reshape(B, -1)
+    wq, w_qp, fc_bias = wpack["FullyConnected"]
+    spec = specs["FullyConnected"]
+    acc, cycles, stats = nc.nc_fc(actq, wq[0, 0], act_qps, w_qp, geom=geom,
+                                  layer_spec=spec,
+                                  plan=plans["FullyConnected"],
+                                  engine=engine, return_stats=True)
+    sxw = np.array([np.float32(qp.scale) * np.float32(w_qp.scale)
+                    for qp in act_qps], np.float32)
+    logits = (np.asarray(acc, np.float32) * sxw[:, None]
+              + fc_bias[None, :].astype(np.float32))
+    modeled = sim.modeled_layer_cycles(plans["FullyConnected"], geom, const)
+    records.append(NCLayerReport(
+        name="FullyConnected", kind="fc", out_shape=tuple(logits.shape),
+        emulated_cycles=int(cycles), modeled_cycles=modeled["total_cycles"],
+        serial_passes=modeled["serial_passes"], modeled_s=modeled["total_s"],
+        lanes=stats.lanes, zero_operand_lanes=stats.zero_operand_lanes,
+        batch=x4.shape[0], filter_loads=stats.filter_loads,
+        skipped_passes=modeled["skipped_passes"],
+        zero_filters=stats.zero_filters, overlap=stats.overlap))
+    state["logits"] = logits
+    yield "FullyConnected"
+
+
+def _merge_chunk_records(per_chunk: list[list[NCLayerReport]],
+                         B: int) -> list[NCLayerReport]:
+    """Merge per-chunk layer reports into whole-batch reports: emulated
+    counters sum across chunks; modeled numbers are PER IMAGE and
+    batch-independent, so the first chunk's stand for all.  Note
+    ``filter_loads`` sums to the chunk count — cross-layer streaming packs
+    each layer's filter grid once per CHUNK, trading §VI-C's once-per-batch
+    residency for the wavefront (the reports keep that honest)."""
+    merged = []
+    for recs in zip(*per_chunk):
+        r0 = recs[0]
+        merged.append(dataclasses.replace(
+            r0,
+            out_shape=(B,) + tuple(r0.out_shape[1:]),
+            emulated_cycles=sum(r.emulated_cycles for r in recs),
+            lanes=sum(r.lanes for r in recs),
+            zero_operand_lanes=sum(r.zero_operand_lanes for r in recs),
+            batch=B,
+            minmax_cycles=sum(r.minmax_cycles for r in recs),
+            filter_loads=sum(r.filter_loads for r in recs),
+        ))
+    return merged
+
+
 def nc_forward(params: dict, x: jax.Array,
                config: InceptionConfig = REDUCED,
                geom: CacheGeometry = XEON_E5_35MB,
@@ -685,7 +771,9 @@ def nc_forward(params: dict, x: jax.Array,
                engine: str | None = None,
                schedule: sched.NetworkSchedule | None = None,
                wpack: dict | None = None,
-               sparse: bool = False):
+               sparse: bool = False,
+               overlap: bool = False,
+               stream_chunk: int | None = None):
     """Quantized Inception forward pass through the bit-serial emulation.
 
     x: [H, W, 3] or batched [B, H, W, 3] float32 in [0, 1].  Every conv,
@@ -717,6 +805,21 @@ def nc_forward(params: dict, x: jax.Array,
     with occupancy implies the same; ``sparse`` only controls the plan
     made here.
 
+    ``overlap=True`` plans §IV-E double buffering: every layer the
+    legality rule grants streams pass k+1's filter columns while pass k's
+    MAC+reduce runs (core/nc_layers.py's depth-1 pipeline), with logits
+    byte-identical to the serial run.  Like ``sparse``, it only controls
+    the plan made here — a precomputed ``schedule`` already decided, and
+    combining the two raises.
+
+    ``stream_chunk=N`` additionally streams the batch through the network
+    in chunks of ``N`` images advanced in a skewed wavefront — layer L of
+    chunk i computes while chunk i+1 runs layer L-1 (cross-layer §VI-C
+    streaming).  Logits stay byte-identical (quantization is per-image),
+    but each chunk packs its own filter grids (``filter_loads`` in the
+    report sums to the chunk count) and plans its own chunk-sized
+    schedule, so it is an experiment flag, not the serving default.
+
     Returns ``(logits [B?, classes], NCForwardReport)`` — the report pairs
     each layer's emulated arithmetic cycles (min/max tree included) with
     the analytic model's serialized-pass cycles and modeled wall time.
@@ -732,57 +835,62 @@ def nc_forward(params: dict, x: jax.Array,
     specs = {s.name: s for s in specs_list}
     if wpack is None:
         wpack = prepare_conv_weights(params, config)
+    if schedule is not None and overlap:
+        raise ValueError("request overlap through the schedule "
+                         "(plan_network(..., overlap=True)); overlap= with "
+                         "an explicit schedule is ambiguous")
+    if schedule is not None and stream_chunk is not None:
+        raise ValueError("stream_chunk replans per chunk; it cannot honor "
+                         "an explicit whole-batch schedule")
+    occ = (network_occupancy(wpack, config)
+           if sparse and schedule is None else None)
+
+    if stream_chunk is not None and stream_chunk < B:
+        # cross-layer streaming: chunk generators advanced in a skewed
+        # wavefront — chunk i runs stage t while chunk i+1 runs stage t-1
+        chunks = [x4[i:i + stream_chunk] for i in range(0, B, stream_chunk)]
+        per_records: list[list[NCLayerReport]] = []
+        per_states: list[dict] = []
+        gens = []
+        for xc in chunks:
+            sc = sched.plan_network(specs_list, geom, batch=xc.shape[0],
+                                    occupancy=occ, overlap=overlap)
+            recs: list[NCLayerReport] = []
+            st = {"concat_requant_cycles": 0}
+            per_records.append(recs)
+            per_states.append(st)
+            gens.append(_nc_stage_gen(
+                xc, config, wpack, specs,
+                {p.spec.name: p for p in sc.layers}, geom, const, engine,
+                recs, st))
+        waiting = list(gens)
+        active: list = []
+        while waiting or active:
+            if waiting:
+                active.append(waiting.pop(0))  # next chunk enters, 1 behind
+            for g in list(active):
+                try:
+                    next(g)
+                except StopIteration:
+                    active.remove(g)
+        logits = np.concatenate([st["logits"] for st in per_states], axis=0)
+        report = NCForwardReport(
+            config.name, tuple(_merge_chunk_records(per_records, B)),
+            batch=B,
+            concat_requant_cycles=sum(st["concat_requant_cycles"]
+                                      for st in per_states))
+        return jnp.asarray(logits if batched else logits[0]), report
+
     if schedule is None:
-        occ = network_occupancy(wpack, config) if sparse else None
         schedule = sched.plan_network(specs_list, geom, batch=B,
-                                      occupancy=occ)
+                                      occupancy=occ, overlap=overlap)
     plans = {p.spec.name: p for p in schedule.layers}
     records: list[NCLayerReport] = []
     state = {"concat_requant_cycles": 0}
-
-    # §IV-D input quantization: images arrive as uint8 pixels — a static
-    # [0, 1] range, no min/max ever computed on an activation tensor.
-    actq = np.clip(np.round(x4 * np.float32(255.0)), 0, 255).astype(np.uint8)
-    act_qps = [q.QuantParams(scale=np.float32(1.0 / 255.0), zero_point=0)] * B
-
-    for name, op in config.stem:
-        actq, act_qps = _nc_apply_op(actq, act_qps, name, op, wpack, specs,
-                                     plans, geom, const, engine, records,
-                                     state)
-    for bname, branches in config.mixed:
-        outs = []
-        for bi, branch in enumerate(branches):
-            yq, qps = actq, act_qps
-            for oi, op in enumerate(branch):
-                yq, qps = _nc_apply_op(yq, qps, f"{bname}_b{bi}_{oi}", op,
-                                       wpack, specs, plans, geom, const,
-                                       engine, records, state)
-            outs.append((yq, qps))
-        actq, act_qps = _nc_concat(outs, state)
-    # global average pool through the array, then FC as a 1x1 conv
-    h = actq.shape[1]
-    actq, act_qps = _nc_run_pool("AvgPool", actq, act_qps,
-                                 ("avgpool", h, 1, "VALID"),
-                                 specs["AvgPool"], geom, const, records)
-    actq = actq.reshape(B, -1)
-    wq, w_qp, fc_bias = wpack["FullyConnected"]
-    spec = specs["FullyConnected"]
-    acc, cycles, stats = nc.nc_fc(actq, wq[0, 0], act_qps, w_qp, geom=geom,
-                                  layer_spec=spec, plan=plans["FullyConnected"],
-                                  engine=engine, return_stats=True)
-    sxw = np.array([np.float32(qp.scale) * np.float32(w_qp.scale)
-                    for qp in act_qps], np.float32)
-    logits = (np.asarray(acc, np.float32) * sxw[:, None]
-              + fc_bias[None, :].astype(np.float32))
-    modeled = sim.modeled_layer_cycles(plans["FullyConnected"], geom, const)
-    records.append(NCLayerReport(
-        name="FullyConnected", kind="fc", out_shape=tuple(logits.shape),
-        emulated_cycles=int(cycles), modeled_cycles=modeled["total_cycles"],
-        serial_passes=modeled["serial_passes"], modeled_s=modeled["total_s"],
-        lanes=stats.lanes, zero_operand_lanes=stats.zero_operand_lanes,
-        batch=B, filter_loads=stats.filter_loads,
-        skipped_passes=modeled["skipped_passes"],
-        zero_filters=stats.zero_filters))
+    for _ in _nc_stage_gen(x4, config, wpack, specs, plans, geom, const,
+                           engine, records, state):
+        pass
     report = NCForwardReport(config.name, tuple(records), batch=B,
                              concat_requant_cycles=state["concat_requant_cycles"])
-    return jnp.asarray(logits if batched else logits[0]), report
+    return jnp.asarray(state["logits"] if batched
+                       else state["logits"][0]), report

@@ -1,0 +1,30 @@
+"""``python -m benchmarks.run --quick`` stays working.
+
+Slow-marked (subprocess + jit warmup): tier-1 deselects it, the
+``benchmarks/run.py`` slow-test gate runs it on every full bench run —
+so the CI pre-check mode can't silently rot between PRs.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+@pytest.mark.slow
+def test_bench_quick_mode_exits_clean():
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    res = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--quick"],
+        cwd=REPO, capture_output=True, text=True, timeout=600, env=env)
+    assert res.returncode == 0, res.stderr[-2000:]
+    # CSV header + at least the kernel/* rows
+    lines = [l for l in res.stdout.splitlines() if l.strip()]
+    assert lines[0] == "name,us_per_call,derived"
+    kernel_rows = [l for l in lines[1:] if l.startswith("kernel/")]
+    assert len(kernel_rows) >= 6, res.stdout
+    # quick mode must never rewrite the committed baseline
+    assert "baseline not" in res.stderr and "rewritten" in res.stderr

@@ -13,7 +13,8 @@ Three layers of defense:
   dense-vs-sparse delta equal to the skip credit TO THE CYCLE.
 * **Golden cycle-model regression** — ``tests/golden/modeled_cycles.json``
   freezes ``simulate_network``'s per-layer modeled cycles for
-  ``reduced_config`` (dense and a fixed 50% pruning, on the paper
+  ``reduced_config`` (dense, a fixed 50% pruning, and the §IV-E
+  overlapped plan's per-layer hidden-load credits, on the paper
   geometry and a 1-slice scale-down where passes actually serialize).
   Any cycle-model drift fails tier-1; regenerate deliberately with
   ``REGEN_GOLDEN=1 pytest tests/test_sparsity.py``.
@@ -325,12 +326,29 @@ def _golden_payload():
             }
         return out
 
+    def overlap_table(schedule, geom):
+        """§IV-E double buffering: freeze which layers are granted the
+        overlap and the seconds each hides — total_cycles stays the
+        dense table's (overlap re-times copies, never compute)."""
+        out = {}
+        for p in schedule.layers:
+            m = modeled_layer_cycles(p, geom)
+            out[p.spec.name] = {
+                "overlap": bool(m["overlap"]),
+                "hidden_s": float(m["hidden_s"]),
+                "overlapped_total_s": float(m["overlapped_total_s"]),
+                "total_cycles": float(m["total_cycles"]),
+            }
+        return out
+
     payload = {"config": cfg.name, "pruning": 0.5, "geometries": {}}
     for geom in (GEOM, GEOM_1SLICE):
         payload["geometries"][geom.name] = {
             "dense": table(sched.plan_network(specs, geom), geom),
             "pruned": table(
                 sched.plan_network(specs, geom, occupancy=occ), geom),
+            "overlapped": overlap_table(
+                sched.plan_network(specs, geom, overlap=True), geom),
         }
     return payload
 
