@@ -348,16 +348,111 @@ def _overlap_rows():
     return out
 
 
+# checksum verification may not cost more than this multiple of the
+# unchecked conv wall/cycles on the _fault_rows workload — the recorded
+# bound the fault gate enforces (the modeled overhead is one extra lane
+# group riding every pass: a few percent, so 1.5x leaves only noise room)
+INTEGRITY_OVERHEAD_BOUND = 1.5
+
+
+def _fault_rows():
+    """Fault-sweep smoke gate (PR 7), quick enough for ``--quick``.
+
+    A small conv runs once unchecked and once integrity-checked with no
+    faults — GATE: logits byte-identical (verification never perturbs the
+    data path) and both cycle and wall overhead under
+    :data:`INTEGRITY_OVERHEAD_BOUND`.  Then every covered fault class
+    (``faults.COVERED_CLASSES``) injects at rate 1 under integrity —
+    GATE: every corrupted pass is detected (zero silent corruption) and
+    the recovered logits are byte-identical to clean.  Any gate failure
+    raises, failing the bench run like the sparsity/overlap gates."""
+    import time
+
+    from repro.core import faults, nc_layers as nc
+    from repro.core import quantize as q
+    from repro.core.cache_geometry import XEON_E5_35MB
+
+    rng = np.random.default_rng(0)
+    geom = XEON_E5_35MB
+    x = rng.uniform(-1, 1, (2, 10, 10, 4)).astype(np.float32)
+    w = rng.uniform(-1, 1, (3, 3, 4, 16)).astype(np.float32)
+    x_qp = q.choose_qparams(jnp.float32(x.min()), jnp.float32(x.max()))
+    w_qp = q.choose_qparams(jnp.float32(w.min()), jnp.float32(w.max()))
+
+    def conv(**kw):
+        t0 = time.perf_counter()
+        res = nc.nc_conv2d(x, w, [x_qp] * 2, w_qp, stride=1, padding="SAME",
+                           geom=geom, **kw)
+        return res, time.perf_counter() - t0
+
+    (out0, cyc0), wall0 = conv()
+    (out1, cyc1, st1), wall1 = conv(integrity=True, return_stats=True)
+    if not np.array_equal(np.asarray(out0), np.asarray(out1)):
+        raise RuntimeError("fault gate: integrity-checked conv logits "
+                           "diverge from unchecked on clean execution")
+    cyc_ratio = cyc1 / cyc0
+    if cyc_ratio > INTEGRITY_OVERHEAD_BOUND:
+        raise RuntimeError(
+            f"fault gate: checksum cycle overhead {cyc_ratio:.2f}x exceeds "
+            f"the {INTEGRITY_OVERHEAD_BOUND}x bound")
+    out = [
+        _rec("faults/conv_unchecked", wall0 * 1e6, "2x 10x10x4 * 3x3x4x16",
+             f"{cyc0} emulated cycles"),
+        _rec("faults/conv_integrity", wall1 * 1e6, "2x 10x10x4 * 3x3x4x16",
+             f"{cyc1} emulated cycles, {cyc_ratio:.3f}x unchecked "
+             f"(bound {INTEGRITY_OVERHEAD_BOUND}x)"),
+    ]
+
+    t0 = time.perf_counter()
+    detected_total = 0
+    for cls in faults.COVERED_CLASSES:
+        if cls == "stuck":
+            probe = faults.FaultState(
+                faults.FaultProfile(n_slices=geom.n_slices))
+            sid = probe.slice_for("nc_conv2d", 0)
+            prof = faults.FaultProfile(seed=5, stuck_slices=(sid,),
+                                       n_slices=geom.n_slices)
+        else:
+            kw = {"filter_flip": dict(filter_flip_rate=1.0),
+                  "act_flip": dict(act_flip_rate=1.0),
+                  "compute": dict(compute_rate=1.0)}[cls]
+            prof = faults.FaultProfile(seed=5, n_slices=geom.n_slices, **kw)
+        with faults.inject(prof) as fs:
+            (outf, _, stf), _ = conv(integrity=True, return_stats=True)
+        if fs.corrupt_attempts == 0:
+            raise RuntimeError(f"fault gate: class {cls!r} injected nothing "
+                               f"at rate 1 — the sweep is not covering it")
+        if fs.detected != fs.corrupt_attempts:
+            raise RuntimeError(
+                f"fault gate: class {cls!r} had {fs.corrupt_attempts} "
+                f"corrupt passes but only {fs.detected} detected — "
+                f"silent corruption")
+        if not np.array_equal(np.asarray(out0), np.asarray(outf)):
+            raise RuntimeError(f"fault gate: class {cls!r} recovered logits "
+                               f"diverge from clean")
+        detected_total += fs.detected
+    wall_sweep = time.perf_counter() - t0
+    out.append(_rec(
+        "faults/covered_class_sweep", wall_sweep * 1e6,
+        f"{len(faults.COVERED_CLASSES)} classes x rate 1",
+        f"{detected_total} faults detected, 0 silent, logits clean"))
+    return out
+
+
 def run():
     RECORDS.clear()
     RETIMERS.clear()
     out = _kernel_rows()
     out.extend(_emulation_rows())
+    out.extend(_fault_rows())
     return out
 
 
 def run_quick():
-    """``kernel/*`` records only — subsecond; ``benchmarks.run --quick``."""
+    """``kernel/*`` + fault-gate records — subsecond; ``benchmarks.run
+    --quick``."""
     RECORDS.clear()
     RETIMERS.clear()
-    return _kernel_rows()
+    out = _kernel_rows()
+    out.extend(_fault_rows())
+    return out

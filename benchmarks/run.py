@@ -166,12 +166,12 @@ def _dump_kernel_records() -> None:
 
 
 def _run_slow_gate() -> bool:
-    """Exercise the `slow`-marked end-to-end tests tier-1 deselects."""
+    """Exercise the `slow`- and `faults`-marked tests tier-1 deselects."""
     if os.environ.get("BENCH_SKIP_SLOW"):
         print("# slow-test gate skipped (BENCH_SKIP_SLOW)", file=sys.stderr)
         return True
     repo = pathlib.Path(__file__).resolve().parent.parent
-    cmd = [sys.executable, "-m", "pytest", "-q", "-m", "slow",
+    cmd = [sys.executable, "-m", "pytest", "-q", "-m", "slow or faults",
            "-o", "addopts=", "tests"]
     print(f"# slow-test gate: {' '.join(cmd[2:])}", file=sys.stderr)
     res = subprocess.run(cmd, cwd=repo)

@@ -13,6 +13,8 @@ batch histogram and SLO hit rate.
 
 Run:  PYTHONPATH=src python examples/serve_quantized.py
       PYTHONPATH=src python examples/serve_quantized.py --neural-cache --slo-ms 5000
+      PYTHONPATH=src python examples/serve_quantized.py --neural-cache \
+          --fault-profile seed=7,filter=0.1,compute=0.05
 """
 import argparse
 import time
@@ -43,7 +45,8 @@ def dequantize_tree(qparams):
                         is_leaf=lambda x: isinstance(x, dict) and "q" in x)
 
 
-def main_neural_cache(slo_ms: float, requests: int = 6) -> None:
+def main_neural_cache(slo_ms: float, requests: int = 6,
+                      fault_profile: str | None = None) -> None:
     """SLO-aware Neural Cache serving (§VI-C batching under a deadline).
 
     Submits ``requests`` images to an :class:`NCServingEngine` armed with
@@ -52,19 +55,33 @@ def main_neural_cache(slo_ms: float, requests: int = 6) -> None:
     :class:`~repro.core.slo.LatencyModel`, and later admissions shrink or
     grow to keep the predicted p99 under the remaining deadline budget.
     Logits are asserted bit-identical to standalone ``nc_forward`` runs —
-    the SLO knob changes batch sizes, never results."""
+    the SLO knob changes batch sizes, never results.
+
+    ``--fault-profile`` (e.g. ``seed=7,filter=0.1,compute=0.05``) scopes
+    seeded fault injection (core/faults.py) over the run with integrity
+    checking armed: corruption is detected by the per-pass checksums and
+    re-executed, so the bit-identity assertion still holds."""
+    import contextlib
+
+    from repro.core import faults
     from repro.models import inception
 
+    profile = (faults.FaultProfile.parse(fault_profile)
+               if fault_profile else None)
     cfg = inception.reduced_config(img=47, width_div=8, classes=8,
                                    stages=("a",))
     params = inception.init_params(jax.random.key(0), config=cfg)
-    eng = NCServingEngine(params, cfg, max_batch=4, slo_ms=slo_ms)
+    eng = NCServingEngine(params, cfg, max_batch=4, slo_ms=slo_ms,
+                          integrity=profile is not None)
     rng = np.random.default_rng(0)
     imgs = rng.random((requests, cfg.img, cfg.img, 3)).astype(np.float32)
     for r in range(requests):
         eng.submit(NCRequest(rid=r, image=imgs[r]))
+    scope = (faults.inject(profile) if profile is not None
+             else contextlib.nullcontext())
     t0 = time.perf_counter()
-    done = eng.run()
+    with scope as fs:
+        done = eng.run()
     dt = time.perf_counter() - t0
     s = eng.stats()
     print(f"[serve-nc] {len(done)} images in {dt:.2f}s emulated, "
@@ -75,6 +92,14 @@ def main_neural_cache(slo_ms: float, requests: int = 6) -> None:
           f"{s['slo_hit_rate']:.0%}); latency model calibrated x"
           f"{s['calibration_scale']:.0f} wall/modeled over "
           f"{s['calibration_samples']} batches")
+    if profile is not None:
+        fstats = fs.stats()
+        print(f"[serve-nc] faults (seed {fstats['seed']}): "
+              f"{fstats['injected']} injected, {fstats['detected']} "
+              f"detected / {fstats['corrupt_attempts']} corrupt passes, "
+              f"{fstats['reexecuted']} re-executed; {s['retries']} batch "
+              f"retries, {s['degraded_batches']} degraded, "
+              f"{s['failed']} failed")
     r0 = next(r for r in done if r.rid == 0)
     ref, _ = inception.nc_forward(params, imgs[0], config=cfg)
     np.testing.assert_array_equal(r0.logits, np.asarray(ref))
@@ -121,8 +146,12 @@ if __name__ == "__main__":
                          "(emulation wall-clock; the model calibrates "
                          "wall vs modeled cycles on the fly)")
     ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--fault-profile", type=str, default=None,
+                    help="seeded fault injection for --neural-cache "
+                         "(core/faults.py spec, e.g. 'seed=7,filter=0.1'); "
+                         "implies integrity checking")
     args = ap.parse_args()
     if args.neural_cache:
-        main_neural_cache(args.slo_ms, args.requests)
+        main_neural_cache(args.slo_ms, args.requests, args.fault_profile)
     else:
         main()

@@ -123,6 +123,8 @@ __all__ = [
     "reduce_cycles",
     "minmax_cycles",
     "dot_cycles",
+    "abft_checksums",
+    "checksum_cycles",
     "bitserial_add",
     "bitserial_sub",
     "bitserial_multiply",
@@ -577,6 +579,45 @@ def dot_cycles(k: int, n_bits: int, acc_bits: int) -> int:
     sum, then the §III-D log tree over ``k`` lanes (the conv inner loop)."""
     return (mul_cycles(n_bits) + add_cycles(max(acc_bits, 2 * n_bits))
             + reduce_cycles(k, acc_bits))
+
+
+# ---------------------------------------------------------------------------
+# ABFT integrity layer (PR 7): checksum columns over one pass's operands.
+# ---------------------------------------------------------------------------
+def abft_checksums(x_rows, w_rows):
+    """ABFT reference sums for one pass over CLEAN unsigned operands.
+
+    The pass computes ``v[m, t] = w_m . x_t``.  Two checksum vectors bound
+    every entry:
+
+    * column reference ``col[t] = x_t . sum_m(w_m)`` — one extra "filter"
+      (the column checksum appended to the packed filter block at load
+      time) dotted against every window row; a corrupted filter word or a
+      corrupted pass output shifts some per-row filter sum,
+    * row reference ``row[m] = sum_t(x_t) . w_m`` — one extra "window row"
+      dotted against every filter; a corrupted activation word shifts some
+      per-filter row sum.
+
+    Because operands are unsigned, a monotone stuck-at-1 corruption can
+    only *raise* sums, and any single-bit flip at a live lane (a lane where
+    the opposing checksum vector is nonzero) shifts exactly one reference
+    — so a verification pass over (col, row) detects every output-changing
+    fault the injector covers; mismatch-free means output-identical.
+
+    Returns ``(col, row)`` as exact int64 vectors."""
+    xr = np.asarray(x_rows, dtype=np.int64)
+    wr = np.asarray(w_rows, dtype=np.int64)
+    return xr @ wr.sum(axis=0), wr @ xr.sum(axis=0)
+
+
+def checksum_cycles(k: int, n_bits: int, acc_bits: int, rows: int,
+                    filters: int) -> int:
+    """Cycles to verify one pass of ``rows`` window rows x ``filters``
+    filter columns: the column checksum is one extra filter lane-group
+    dotted per row, the row checksum one extra window row dotted per
+    filter — each priced at the same per-lane-group :func:`dot_cycles` as
+    the real work (the checksum columns ride the §III-D reduce tree)."""
+    return dot_cycles(k, n_bits, acc_bits) * (max(rows, 0) + max(filters, 0))
 
 
 # ---------------------------------------------------------------------------

@@ -59,6 +59,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bitserial as bs
+from repro.core import faults
 from repro.core import quantize as q
 from repro.core import schedule as sched
 from repro.core.cache_geometry import CacheGeometry, XEON_E5_35MB
@@ -95,6 +96,18 @@ class ConvStats:
     zero_filters: int = 0  # all-zero filters the sparse plan pruned
     skipped_passes: int = 0  # serialized passes the plan dropped (per image)
     overlap: bool = False  # §IV-E double buffering ran (prefetch + deferred store)
+    # PR 7 integrity/fault path (all zero when integrity is off and no
+    # fault environment is active — the unchecked path never touches them)
+    integrity: bool = False  # ABFT checksum verification ran per pass
+    verify_passes: int = 0  # checksum verifications charged (attempts incl.)
+    reexec_passes: int = 0  # tile passes re-executed after detected faults
+    faults_detected: int = 0  # verification mismatches caught
+    integrity_cycles: int = 0  # §III cycles charged for checksum columns
+    reexec_cycles: int = 0  # §III cycles charged for pass re-executions
+    quarantined_slices: tuple = ()  # slices lost to repeated failures
+    # the plan actually executed — differs from the caller's only after a
+    # quarantine re-plan (excluded from equality: plans carry the spec)
+    plan: object = dataclasses.field(default=None, compare=False, repr=False)
 
 
 def nc_dot(x_q, w_q, acc_bits: int = 24, n_bits: int = 8):
@@ -234,6 +247,7 @@ def nc_conv2d(
     occupancy: sched.LayerOccupancy | str | None = None,
     engine: str = "host",
     overlap: bool = False,
+    integrity: bool = False,
     return_stats: bool = False,
 ):
     """Quantized conv through the array model (packed-resident + tiled).
@@ -289,6 +303,23 @@ def nc_conv2d(
     reorders WHEN packing and copies happen.  Like sparsity, overlap is a
     plan decision: requesting ``overlap=True`` alongside an explicit plan
     raises (the plan already decided).
+
+    Integrity + fault path (PR 7, ``integrity=True`` or a plan that set
+    it, and/or an active ``faults.inject`` scope): each tile pass runs
+    checked — ABFT checksum columns (``bitserial.abft_checksums``) are
+    verified against the pass's MAC+reduce output; a mismatch triggers
+    bounded re-execution (clean operands are re-packed from the resident
+    caches, which faults never mutate), repeated failure quarantines the
+    pass's slice and re-plans through ``schedule.plan_layer`` over the
+    survivors, and an unrecoverable pass raises
+    ``faults.IntegrityError``.  Verification and re-execution charge §III
+    cycles (one extra lane group per row + filter per verify; the full
+    tile per re-execution).  The checked path executes tiles serially and
+    stores immediately — outputs stay byte-identical to the unchecked
+    path on clean passes, and with integrity off and no fault scope the
+    original unchecked loop runs bit for bit.  Like sparsity and overlap,
+    integrity is a plan decision: ``integrity=True`` alongside an
+    explicit plan raises.
     """
     xin = np.asarray(x)
     batched = xin.ndim == 4
@@ -338,6 +369,10 @@ def nc_conv2d(
         raise ValueError("request overlap through the plan "
                          "(plan_layer(..., overlap=True)); overlap= with "
                          "an explicit plan is ambiguous")
+    if integrity and not replan:
+        raise ValueError("request integrity through the plan "
+                         "(plan_layer(..., integrity=True)); integrity= "
+                         "with an explicit plan is ambiguous")
     if replan:
         occ = occupancy
         if isinstance(occ, str):
@@ -346,13 +381,17 @@ def nc_conv2d(
                                  f"'detect' or None, got {occ!r}")
             occ = sched.LayerOccupancy.from_filter_rows(
                 w_rows, w_qp.bits, zw_int)
+        quarantined: tuple = ()
         if plan is not None:
             if occ is None:
                 occ = plan.occupancy  # tile overrides must not drop sparsity
             overlap = overlap or plan.overlap  # ... nor drop double buffering
+            integrity = integrity or plan.integrity  # ... nor drop checking
+            quarantined = plan.quarantined_slices
         plan = sched.plan_layer(spec, geom, batch=B, tile_pixels=tile_pixels,
                                 tile_filters=tile_filters, occupancy=occ,
-                                overlap=overlap)
+                                overlap=overlap, integrity=integrity,
+                                quarantined_slices=quarantined)
     tile_rows = max(1, min(plan.tile_rows, rows_total))
     tile_filters = max(1, min(plan.tile_filters, M))
 
@@ -437,36 +476,165 @@ def nc_conv2d(
 
     order = [(pi, mi) for pi in range(len(p_tiles))
              for mi in range(len(m_tiles))]
-    pending = None  # §IV-E double buffer: one dispatched tile in flight
-    for t, (pi, mi) in enumerate(order):
-        for stale in [k for k in x_cache if k < pi]:
-            del x_cache[stale]  # row tiles behind the pipeline are done
-        vals, _ = bs.packed_dot_words(
-            _x_tile(pi), _filter_tile(mi), K=K, acc_bits=acc_bits,
-            engine=engine, materialize=not overlap_exec)
-        n_tiles += 1
-        if not overlap_exec:
-            _store(vals, pi, mi)
-            continue
-        # tile t's MAC+reduce is in flight (asynchronous dispatch): run
-        # tile t+1's load stage NOW — pack the next pass's filter columns
-        # and window rows while t computes — then retire tile t-1, whose
-        # result the device finished before starting t
-        if t + 1 < len(order):
-            npi, nmi = order[t + 1]
-            _filter_tile(nmi)
-            _x_tile(npi)
+    # PR 7 checked path: active fault scope and/or an integrity plan runs
+    # every tile serially through verify/retry/quarantine; otherwise the
+    # unchecked loop below runs bit for bit (standing off-switch idiom)
+    fs = faults.active()
+    integrity_on = bool(plan.integrity)
+    checked = integrity_on or fs is not None
+    eff_plan = plan
+    verify_passes = reexec_passes = faults_detected = 0
+    integrity_cycles = reexec_cycles = 0
+    if checked:
+        P_lay, _, r_lay = bs._row_layout(K)
+        cs_refs: dict = {}
+        lanes_f: dict = {}
+        lanes_a: dict = {}
+
+        def _refs(pi: int, mi: int):
+            """Clean ABFT references for tile (pi, mi), encoded once from
+            the resident operands (the load-time checksum columns)."""
+            got = cs_refs.get((pi, mi))
+            if got is None:
+                p0, p1 = p_tiles[pi]
+                m0, m1 = m_tiles[mi]
+                got = cs_refs[(pi, mi)] = bs.abft_checksums(
+                    win_flat[p0:p1], w_rows_live[m0:m1])
+            return got
+
+        def _live_lanes_filter(pi: int) -> np.ndarray:
+            """Lanes where a filter-side fault provably changes output:
+            the window rows riding bit slot 0 (the injected replica) have
+            a nonzero lane sum there."""
+            got = lanes_f.get(pi)
+            if got is None:
+                p0, p1 = p_tiles[pi]
+                sums = win_flat[p0:p1][0::r_lay].sum(axis=0, dtype=np.int64)
+                got = lanes_f[pi] = np.flatnonzero(sums > 0)
+            return got
+
+        def _live_lanes_act(mi: int) -> np.ndarray:
+            """Lanes where an activation-side fault provably changes
+            output: some live filter is nonzero there."""
+            got = lanes_a.get(mi)
+            if got is None:
+                m0, m1 = m_tiles[mi]
+                sums = w_rows_live[m0:m1].sum(axis=0, dtype=np.int64)
+                got = lanes_a[mi] = np.flatnonzero(sums > 0)
+            return got
+
+        max_retries = fs.profile.max_retries if fs is not None else 1
+        for t, (pi, mi) in enumerate(order):
+            for stale in [k for k in x_cache if k < pi]:
+                del x_cache[stale]
+            p0, p1 = p_tiles[pi]
+            m0, m1 = m_tiles[mi]
+            attempts = 0       # retry budget (refreshed by a quarantine)
+            execs = 0          # total executions of this tile
+            quarantine_rounds = 0
+            while True:
+                execs += 1
+                xw = _x_tile(pi)
+                ww = _filter_tile(mi)
+                corrupted = False
+                if fs is not None:
+                    fs.maybe_stall(spec.name, t)
+                    ww2 = fs.corrupt_filter_words(
+                        ww, spec.name, t, lanes=_live_lanes_filter(pi),
+                        filters=m1 - m0, P=P_lay, r=r_lay)
+                    xw2 = fs.corrupt_act_words(
+                        xw, spec.name, t, lanes=_live_lanes_act(mi),
+                        rows=p1 - p0, P=P_lay, r=r_lay)
+                    corrupted = ww2 is not ww or xw2 is not xw
+                    xw, ww = xw2, ww2
+                vals, _ = bs.packed_dot_words(
+                    xw, ww, K=K, acc_bits=acc_bits, engine=engine)
+                v2 = np.asarray(vals)[: m1 - m0, : p1 - p0]
+                if fs is not None:
+                    v3 = fs.corrupt_values(v2, spec.name, t,
+                                           filters=m1 - m0, rows=p1 - p0)
+                    corrupted = corrupted or v3 is not v2
+                    v2 = v3
+                    if corrupted:
+                        fs.note_corrupt_attempt()
+                if execs == 1:
+                    n_tiles += 1
+                else:
+                    reexec_passes += 1
+                    reexec_cycles += per_dot * (p1 - p0) * (m1 - m0)
+                    if fs is not None:
+                        fs.note_reexecution()
+                if not integrity_on:
+                    break  # faults without checking: corruption flows through
+                verify_passes += 1
+                integrity_cycles += per_dot * ((p1 - p0) + (m1 - m0))
+                ref_col, ref_row = _refs(pi, mi)
+                if ((v2.sum(axis=0, dtype=np.int64) == ref_col).all()
+                        and (v2.sum(axis=1, dtype=np.int64) == ref_row).all()):
+                    break
+                faults_detected += 1
+                if fs is not None:
+                    fs.note_detected()
+                attempts += 1
+                if attempts <= max_retries:
+                    continue
+                # retry budget exhausted — only a persistent (stuck-at)
+                # fault survives clean re-execution, so quarantine the
+                # pass's slice, re-plan over the survivors (the pass ->
+                # slice map shifts off the dead slice) and grant one
+                # fresh budget; unrecoverable passes raise
+                sid = fs.slice_for(spec.name, t) if fs is not None else None
+                can_quarantine = (
+                    fs is not None and sid is not None
+                    and sid not in fs.quarantined
+                    and len(fs.quarantined) < geom.n_slices - 1
+                    and quarantine_rounds < geom.n_slices)
+                if not can_quarantine:
+                    raise faults.IntegrityError(spec.name, t, attempts)
+                fs.quarantine(sid)
+                quarantine_rounds += 1
+                eff_plan = sched.plan_layer(
+                    spec, geom, batch=B,
+                    tile_pixels=tile_rows, tile_filters=tile_filters,
+                    occupancy=plan.occupancy, overlap=plan.overlap,
+                    integrity=True,
+                    quarantined_slices=tuple(sorted(fs.quarantined)))
+                attempts = 0
+            _store(v2, pi, mi)
+    else:
+        pending = None  # §IV-E double buffer: one dispatched tile in flight
+        for t, (pi, mi) in enumerate(order):
+            for stale in [k for k in x_cache if k < pi]:
+                del x_cache[stale]  # row tiles behind the pipeline are done
+            vals, _ = bs.packed_dot_words(
+                _x_tile(pi), _filter_tile(mi), K=K, acc_bits=acc_bits,
+                engine=engine, materialize=not overlap_exec)
+            n_tiles += 1
+            if not overlap_exec:
+                _store(vals, pi, mi)
+                continue
+            # tile t's MAC+reduce is in flight (asynchronous dispatch): run
+            # tile t+1's load stage NOW — pack the next pass's filter columns
+            # and window rows while t computes — then retire tile t-1, whose
+            # result the device finished before starting t
+            if t + 1 < len(order):
+                npi, nmi = order[t + 1]
+                _filter_tile(nmi)
+                _x_tile(npi)
+            if pending is not None:
+                _store(*pending)
+            pending = (vals, pi, mi)
         if pending is not None:
             _store(*pending)
-        pending = (vals, pi, mi)
-    if pending is not None:
-        _store(*pending)
     if zero_mask is not None:
         # pruned passes: an all-zero filter's dot is the affine constant
         # zw * sum_k(x_k) — exact, no engine lanes clocked for it
         row_sums = win_flat.sum(axis=1, dtype=np.int64)
         out[:, zero_mask] = zw_int * row_sums[:, None]
     total_cycles = per_dot * rows_total * M_live  # one dot per live (b,e,f,m)
+    # PR 7: checksum verifications + re-executed tiles charge the same §III
+    # formulas as the real work — an additive term, zero when unchecked
+    total_cycles += integrity_cycles + reexec_cycles
 
     # affine-zero-point correction (done by the accumulating requant step
     # in-cache; exact integer identity — zero points are per image)
@@ -492,14 +660,22 @@ def nc_conv2d(
         tiles=n_tiles,
         tile_pixels=tile_rows,
         tile_filters=tile_filters,
-        serial_passes=plan.serial_passes,
+        serial_passes=eff_plan.serial_passes,
         engine_words_total=bs.SKIP_STATS.words_total - skip0_words,
         engine_words_skipped=bs.SKIP_STATS.words_skipped - skip0_skipped,
         batch=B,
         filter_loads=1,
         zero_filters=M - M_live,
-        skipped_passes=plan.skipped_passes,
-        overlap=overlap_exec,
+        skipped_passes=eff_plan.skipped_passes,
+        overlap=overlap_exec and not checked,  # checked path runs serially
+        integrity=integrity_on,
+        verify_passes=verify_passes,
+        reexec_passes=reexec_passes,
+        faults_detected=faults_detected,
+        integrity_cycles=integrity_cycles,
+        reexec_cycles=reexec_cycles,
+        quarantined_slices=eff_plan.quarantined_slices,
+        plan=eff_plan,
     )
     return result, total_cycles, stats
 

@@ -263,6 +263,15 @@ class SlicePlan:
     # consumers are bit-identical to the strictly serial PR 3/4 behavior
     filter_bytes_per_pass: int = 0  # ONE pass's filter columns (live set)
     overlap: bool = False  # pass k+1's load streams under pass k's compute
+    # PR 7 integrity: ABFT checksum columns verified after every pass's
+    # MAC+reduce; integrity=False plans and their consumers are
+    # bit-identical to the unchecked behavior (same invariant idiom as
+    # occupancy/overlap above)
+    integrity: bool = False  # verify checksum columns after each pass
+    # slices quarantined by repeated integrity failures: the pass list is
+    # re-serialized over the surviving slices (the fault path's analogue of
+    # the pruned-pass machinery); () <=> full slice pool, numbers untouched
+    quarantined_slices: tuple[int, ...] = ()
 
     @property
     def is_compute(self) -> bool:
@@ -300,7 +309,9 @@ def plan_layer(spec: LayerSpec,
                tile_pixels: int | None = None,
                tile_filters: int | None = None,
                occupancy: LayerOccupancy | None = None,
-               overlap: bool = False) -> SlicePlan:
+               overlap: bool = False,
+               integrity: bool = False,
+               quarantined_slices: Sequence[int] = ()) -> SlicePlan:
     """Map one layer (§IV-A/B) and schedule it for ``batch`` images.
 
     ``occupancy`` makes value sparsity an input to the plan: passes whose
@@ -330,10 +341,35 @@ def plan_layer(spec: LayerSpec,
     * an occupancy whose ``total_filters`` disagrees with the spec
       raises (over-claiming sparsity is an error, not an optimization),
     * zero detected sparsity (``occupancy`` with no zero filters) plans
-      structurally equal to ``occupancy=None``."""
+      structurally equal to ``occupancy=None``.
+
+    ``integrity=True`` appends ABFT checksum columns to each pass's packed
+    filter block, verified after its MAC+reduce (the fault path of
+    ``core/faults.py``); the simulator prices the verification as an exact
+    additive term and ``integrity=False`` plans are field-for-field
+    identical to unchecked ones.  ``quarantined_slices`` removes slices
+    lost to repeated integrity failures from the §IV-B replication pool:
+    the SAME serialization rule re-runs over the surviving parallelism, so
+    pass counts (and their pricing) grow honestly while the layout stays
+    the mapper's."""
     mapped = map_layer(spec, geom)
     E = F = spec.E
     skipped = 0
+    quarantined = tuple(sorted(set(int(s) for s in quarantined_slices)))
+    parallel = mapped.parallel_convs
+    base_serial = mapped.serial_passes
+    if quarantined and spec.kind in ("conv", "fc"):
+        if not all(0 <= s < geom.n_slices for s in quarantined):
+            raise ValueError(
+                f"{spec.name}: quarantined slices {quarantined} out of range "
+                f"for {geom.n_slices}-slice geometry")
+        # §IV-B replication is uniform across slices, so losing a slice
+        # scales the parallel conv pool proportionally; the surviving pool
+        # feeds the mapper's ONE serialization rule
+        live_slices = max(geom.n_slices - len(quarantined), 1)
+        parallel = max(1, mapped.parallel_convs * live_slices
+                       // geom.n_slices)
+        base_serial = serial_passes_for(spec.conv_count, parallel) or 1
     if spec.kind in ("conv", "fc"):
         check_wordline_budget(mapped, geom)
         K = spec.R * spec.S * spec.C
@@ -355,8 +391,8 @@ def plan_layer(spec: LayerSpec,
             # zero filters contribute no serialized work (their outputs are
             # the analytically-known affine constant)
             live_passes = serial_passes_for(
-                occupancy.n_live * E * F, mapped.parallel_convs)
-            skipped = mapped.serial_passes - live_passes
+                occupancy.n_live * E * F, parallel)
+            skipped = base_serial - live_passes
             filter_bytes = spec.R * spec.S * spec.C * occupancy.n_live
     else:  # pooling: no filters, no requantization — comparisons in place
         K = spec.filter_elems
@@ -374,7 +410,7 @@ def plan_layer(spec: LayerSpec,
     # §IV-E double buffering: one pass's filter columns must fit the output
     # half of the reserved way next to whatever outputs stay staged there
     # (spilled outputs live in DRAM and free the whole half for prefetch)
-    executed = mapped.serial_passes - skipped
+    executed = base_serial - skipped
     fb_per_pass = pass_filter_bytes(filter_bytes, executed)
     headroom = cap - (0 if spill else spec.output_bytes)
     ov = (overlap and spec.kind in ("conv", "fc") and executed > 1
@@ -386,8 +422,8 @@ def plan_layer(spec: LayerSpec,
         filter_bytes=filter_bytes,
         input_bytes_per_image=spec.input_bytes,
         output_bytes_per_image=spec.output_bytes,
-        serial_passes=mapped.serial_passes,
-        total_passes=mapped.serial_passes * batch,
+        serial_passes=base_serial,
+        total_passes=base_serial * batch,
         spill_to_dram=spill,
         spill_bytes_per_image=2 * spec.output_bytes if spill else 0,
         quant_passes=quant_passes,
@@ -396,6 +432,8 @@ def plan_layer(spec: LayerSpec,
         skipped_passes=skipped,
         filter_bytes_per_pass=fb_per_pass,
         overlap=ov,
+        integrity=bool(integrity) and spec.kind in ("conv", "fc"),
+        quarantined_slices=quarantined,
     )
 
 
@@ -416,6 +454,7 @@ class NetworkSchedule:
     geom: CacheGeometry
     batch: int
     overlap: bool = False  # §IV-E double buffering requested for the net
+    integrity: bool = False  # PR 7 checksum verification requested
 
     def plan(self, name: str) -> SlicePlan:
         for p in self.layers:
@@ -471,16 +510,22 @@ def plan_network(specs: Sequence[LayerSpec] | Iterable[LayerSpec],
                  batch: int = 1,
                  occupancy: Mapping[str, LayerOccupancy] | None = None,
                  overlap: bool = False,
+                 integrity: bool = False,
+                 quarantined_slices: Sequence[int] = (),
                  ) -> NetworkSchedule:
     """Plan a network.  ``occupancy`` maps layer names to their
     :class:`LayerOccupancy` (layers absent from the map plan dense);
     ``overlap`` requests §IV-E double buffering for every layer (granted
-    per layer by :func:`plan_layer`'s legality rule)."""
+    per layer by :func:`plan_layer`'s legality rule); ``integrity``
+    requests PR 7 checksum verification for every compute layer, and
+    ``quarantined_slices`` re-serializes every layer over the surviving
+    slice pool."""
     occupancy = occupancy or {}
     return NetworkSchedule(
         tuple(plan_layer(s, geom, batch, occupancy=occupancy.get(s.name),
-                         overlap=overlap)
-              for s in specs), geom, batch, overlap)
+                         overlap=overlap, integrity=integrity,
+                         quarantined_slices=quarantined_slices)
+              for s in specs), geom, batch, overlap, bool(integrity))
 
 
 def prune_occupancy(specs: Iterable[LayerSpec], fraction: float = 0.5,

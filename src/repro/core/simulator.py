@@ -87,6 +87,10 @@ class SimConstants:
     pool_cmp_cycles: int = 27  # sub(8) + masked copy + tag load
     quant_pass_cycles: int = 3546  # 3 x 32-bit fixed-point multiplies (BN + requant)
     quant_layer_overhead_cycles: int = 2500  # min/max tree + bus reduction
+    checksum_pass_cycles: int = 368  # PR 7 ABFT verify per executed pass:
+    #   the checksum column is one extra lane group riding the pass's
+    #   MAC (mac8) plus one reduce step to fold its partial sum (236+132);
+    #   priced ONLY when the plan sets integrity (exact additive term)
     # effective bandwidths (bytes/s) — measured by the paper's micro-benchmarks
     filter_bw: float = 10.96e9  # DRAM read + ring/bus broadcast + array stores
     input_bw: float = 51.5e9  # reserved-way reads + intra-slice broadcast
@@ -135,10 +139,15 @@ class LayerResult:
     # have no predecessor to hide under
     prologue_s: float = 0.0  # un-hideable load of pass 0's filter columns
     overlap: bool = False
+    # PR 7 integrity: per-pass ABFT checksum verification (plan.integrity).
+    # Kept OUT of mac_s/reduce_s so the §IV-E hidden-load credit (capped by
+    # mac+reduce) is untouched and the additive-credit invariant is exact.
+    integrity_s: float = 0.0
 
     @property
     def compute_s(self) -> float:
-        return self.mac_s + self.reduce_s + self.quant_s + self.pool_s
+        return (self.mac_s + self.reduce_s + self.quant_s + self.pool_s
+                + self.integrity_s)
 
     @property
     def total_s(self) -> float:
@@ -248,9 +257,14 @@ def simulate_layer(
     overlap = plan.overlap
     prologue_s = (plan.filter_bytes_per_pass / const.filter_bw
                   if overlap else 0.0)
+    # PR 7 integrity: one checksum verification per executed pass, an
+    # exact additive term (zero — bit-identical pricing — when off)
+    integrity_s = (passes * const.checksum_pass_cycles / f_hz
+                   if plan.integrity else 0.0)
     return LayerResult(spec, m, mac_s, reduce_s, quant_s, 0.0, filter_s,
                        input_s, output_s, per_conv, energy, plan,
-                       prologue_s=prologue_s, overlap=overlap)
+                       prologue_s=prologue_s, overlap=overlap,
+                       integrity_s=integrity_s)
 
 
 def modeled_layer_cycles(
@@ -278,23 +292,37 @@ def modeled_layer_cycles(
     overlap-invariant; the hidden-load credit is reported in seconds
     (``hidden_s``, with the un-hideable ``prologue_s``) and
     ``overlapped_total_s = total_s - hidden_s`` is the layer's §IV-E
-    double-buffered wall time (== ``total_s`` when overlap is off)."""
+    double-buffered wall time (== ``total_s`` when overlap is off).
+
+    Integrity (PR 7) is the same additive idiom: when the plan sets
+    ``integrity``, each executed pass also pays ``checksum_pass_cycles``
+    (``integrity_cycles`` in total, folded into ``total_cycles`` and the
+    skip credit so EVERY credit identity stays exact), and
+    ``reexec_pass_cycles`` is the price of re-running one pass after a
+    detected fault — the engine multiplies it by its measured re-execution
+    count.  Integrity-off plans price bit-identically (both terms zero)."""
     res = simulate_layer(spec, geom, const)
     per_pass = res.compute_cycles_per_pass
-    passes = res.mapped.serial_passes
+    passes = (res.plan.serial_passes if res.plan is not None
+              else res.mapped.serial_passes)
     skipped = res.plan.skipped_passes if res.plan is not None else 0
+    cs_per_pass = (const.checksum_pass_cycles
+                   if res.plan is not None and res.plan.integrity else 0)
     return dict(
         per_pass_cycles=per_pass,
         serial_passes=passes,
         skipped_passes=skipped,
-        skip_credit_cycles=per_pass * skipped,
-        total_cycles=per_pass * (passes - skipped),
+        skip_credit_cycles=(per_pass + cs_per_pass) * skipped,
+        total_cycles=(per_pass + cs_per_pass) * (passes - skipped),
+        integrity_cycles=cs_per_pass * (passes - skipped),
+        reexec_pass_cycles=per_pass + cs_per_pass,
         compute_s=res.compute_s,
         total_s=res.total_s,
         overlap=res.overlap,
         prologue_s=res.prologue_s,
         hidden_s=res.hidden_s,
         overlapped_total_s=res.total_s - res.hidden_s,
+        integrity_s=res.integrity_s,
     )
 
 
@@ -334,8 +362,15 @@ class NetworkResult:
         return sum(l.pool_s for l in self.layers)
 
     @property
+    def integrity_s(self) -> float:
+        """PR 7 per-pass checksum verification, summed over layers — the
+        network's exact additive integrity cost (zero when off)."""
+        return sum(l.integrity_s for l in self.layers)
+
+    @property
     def compute_s(self) -> float:
-        return self.mac_s + self.reduce_s + self.quant_s + self.pool_s
+        return (self.mac_s + self.reduce_s + self.quant_s + self.pool_s
+                + self.integrity_s)
 
     @property
     def marginal_s(self) -> float:

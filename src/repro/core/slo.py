@@ -95,6 +95,7 @@ class LatencyModel:
         self.scale = 1.0  # EWMA of observed wall_s / modeled_batch_s
         self._recent = collections.deque(maxlen=window)  # recent ratios
         self.samples = 0
+        self.excluded = 0  # degraded/fallback batches kept out of calibration
 
     # -- modeled (hardware) time --------------------------------------------
     def result_for(self, batch: int) -> NetworkResult:
@@ -132,6 +133,18 @@ class LatencyModel:
         self._recent.append(ratio)
         self.samples += 1
         return ratio
+
+    def exclude(self, batch: int, wall_s: float) -> None:
+        """Explicitly keep one measured batch OUT of the calibration.
+
+        Fault-degraded batches (a fallback schedule, or the float reference
+        path) do not execute the plan the model prices, so folding their
+        wall time into the wall/modeled ratio would poison every later
+        prediction.  The engine calls this instead of :meth:`observe` for
+        such batches — the exclusion is recorded (``excluded``) so the
+        accounting in ``stats()`` stays honest, and ``scale``/``samples``/
+        the tail window are untouched."""
+        self.excluded += 1
 
     @property
     def worst(self) -> float:

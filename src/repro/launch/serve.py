@@ -37,6 +37,8 @@ Usage:
     python -m repro.launch.serve --arch olmo-1b --reduced --requests 12
     python -m repro.launch.serve --neural-cache --requests 8 --max-batch 4
     python -m repro.launch.serve --neural-cache --requests 8 --slo-ms 50
+    python -m repro.launch.serve --neural-cache --requests 8 \
+        --fault-profile seed=7,filter=0.05,stuck=3
 """
 from __future__ import annotations
 
@@ -61,6 +63,8 @@ class Request:
     max_tokens: int = 16
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    failed: bool = False
+    error: str | None = None
 
 
 @dataclasses.dataclass
@@ -71,15 +75,35 @@ class Slot:
 
 
 class BatchQueueEngine:
-    """Shared admission plumbing: a request queue drained by ``step()``."""
+    """Shared admission plumbing: a request queue drained by ``step()``.
+
+    Failure contract (PR 7): an exception raised while executing one
+    admitted batch fails ONLY that batch — its requests land in
+    ``failed`` with the error string recorded, ``errors`` keeps the
+    engine-level log, and the engine keeps draining the rest of the
+    queue instead of unwinding ``run()``."""
 
     def __init__(self):
         self.queue = []
         self.completed = []
+        self.failed = []
+        self.errors: list[str] = []
         self.steps = 0
 
     def submit(self, req) -> None:
         self.queue.append(req)
+
+    def _fail_requests(self, reqs, err: BaseException | str) -> None:
+        """Mark ``reqs`` failed with the error recorded, engine-wide and
+        per-request; they are terminal (never re-queued)."""
+        msg = str(err) or type(err).__name__ if isinstance(
+            err, BaseException) else str(err)
+        self.errors.append(msg)
+        for r in reqs:
+            r.done = True
+            r.failed = True
+            r.error = msg
+            self.failed.append(r)
 
 
 class ServingEngine(BatchQueueEngine):
@@ -101,10 +125,16 @@ class ServingEngine(BatchQueueEngine):
             if slot.active or not self.queue:
                 continue
             req = self.queue.pop(0)
-            # prefill this slot: simple per-request prefill into row i
+            # prefill this slot: simple per-request prefill into row i.
+            # A prefill failure fails only this request — the slot stays
+            # free for the next queued one
             toks = jnp.asarray(req.prompt, jnp.int32)[None]
-            logits, caches1 = T.prefill(self.cfg, self.params, toks,
-                                        max_len=self.max_len)
+            try:
+                logits, caches1 = T.prefill(self.cfg, self.params, toks,
+                                            max_len=self.max_len)
+            except Exception as e:  # noqa: BLE001 — batch-failure contract
+                self._fail_requests([req], e)
+                continue
             self.caches = _write_slot(self.caches, caches1, i)
             nxt = int(jnp.argmax(logits[0]))
             req.out.append(nxt)
@@ -117,8 +147,20 @@ class ServingEngine(BatchQueueEngine):
         if not any(s.active for s in self.slots):
             return False
         pos = max(s.pos for s in self.slots if s.active)
-        logits, self.caches = self._decode(self.params, self.tokens,
-                                           self.caches, jnp.int32(pos))
+        try:
+            logits, self.caches = self._decode(self.params, self.tokens,
+                                               self.caches, jnp.int32(pos))
+        except Exception as e:  # noqa: BLE001 — batch-failure contract
+            # the fused decode advances every active slot at once, so a
+            # mid-batch failure fails exactly the admitted batch (the
+            # active slots); freed slots keep draining the queue
+            active = [s.req for s in self.slots if s.active]
+            self._fail_requests(active, e)
+            for s in self.slots:
+                if s.active:
+                    s.active, s.req = False, None
+            self.steps += 1
+            return True
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         new_tokens = np.asarray(self.tokens).copy()
         for i, slot in enumerate(self.slots):
@@ -161,6 +203,9 @@ class NCRequest:
     image: np.ndarray  # [H, W, 3] float32 in [0, 1]
     logits: np.ndarray | None = None
     done: bool = False
+    failed: bool = False  # unrecoverable after the degradation ladder
+    error: str | None = None
+    degraded: str | None = None  # "fallback-schedule" | "float" when not primary
     # SLO accounting (stamped by the engine)
     arrival_t: float = 0.0  # engine-clock submit time
     latency_s: float | None = None  # queue wait + batch execution wall
@@ -208,16 +253,33 @@ class NCServingEngine(BatchQueueEngine):
     ``nc_forward``, so logits stay bit-identical to standalone runs
     whatever batch sizes the policy picks.
 
+    ``integrity=True`` (PR 7) plans every batch size with ABFT checksum
+    verification (``plan_network(..., integrity=True)``): corruption
+    under an active ``core.faults`` scope is detected and re-executed
+    inside the engine's forward, logits stay byte-identical, and the
+    latency model prices the checksum passes.  Independent of the flag, a
+    batch whose forward RAISES walks the recovery ladder (``_recover``):
+    primary-schedule retries within the oldest request's remaining
+    deadline budget, then a dense/no-overlap fallback schedule, then the
+    float reference forward, then the batch is marked failed — the engine
+    never strands queued requests.  Only primary successes (retries
+    included, at their true total wall time) calibrate the
+    :class:`~repro.core.slo.LatencyModel`; degraded batches are
+    explicitly excluded (``LatencyModel.exclude``).
+
     The engine clock is injectable (``now_fn``; ``step``/``submit`` also
     take an explicit ``now``) so deadline behavior is testable without
     wall-clock sleeps.  Stats: ``batch_histogram`` (admitted batch size →
     count), ``slo_hits``/``slo_misses``/``slo_hit_rate``, ``decisions``
-    (every :class:`~repro.core.slo.AdmissionDecision`).
+    (every :class:`~repro.core.slo.AdmissionDecision`), plus the
+    fault/recovery ledger (``failed``/``errors``/``retries``/
+    ``degraded_batches``/``calibration_excluded``).
     """
 
     def __init__(self, params, config=None, *, max_batch: int = 4,
                  geom=None, engine: str | None = None, sparse: bool = True,
-                 overlap: bool = True, slo_ms: float | None = None,
+                 overlap: bool = True, integrity: bool = False,
+                 slo_ms: float | None = None,
                  hold_slack_ms: float | None = None, now_fn=time.monotonic):
         from repro.core import schedule as nc_schedule
         from repro.core import slo as nc_slo
@@ -240,11 +302,16 @@ class NCServingEngine(BatchQueueEngine):
         self.occupancy = (inception.network_occupancy(self.wpack, self.config)
                           if sparse else None)
         self.overlap = overlap
+        self.integrity = integrity
         self.schedule = self._plan_network(self.specs, self.geom,
                                            batch=max_batch,
                                            occupancy=self.occupancy,
-                                           overlap=self.overlap)
+                                           overlap=self.overlap,
+                                           integrity=self.integrity)
         self._schedules = {max_batch: self.schedule}
+        self._fallback_schedules: dict = {}
+        self.retries = 0  # primary re-attempts that succeeded or ran
+        self.degraded_batches = 0  # batches served off the degradation ladder
         self.reports = []
         # SLO control loop: the latency model prices the SAME plan objects
         # this engine executes (shared _schedule_for cache)
@@ -266,8 +333,26 @@ class NCServingEngine(BatchQueueEngine):
             self._schedules[n] = self._plan_network(self.specs, self.geom,
                                                     batch=n,
                                                     occupancy=self.occupancy,
-                                                    overlap=self.overlap)
+                                                    overlap=self.overlap,
+                                                    integrity=self.integrity)
         return self._schedules[n]
+
+    def _fallback_schedule_for(self, n: int):
+        """Degradation rung 2's plan: dense (no pruned passes), serial (no
+        double buffering) — the most conservative schedule the engine can
+        execute, keeping any integrity checking the deployment asked for."""
+        if n not in self._fallback_schedules:
+            self._fallback_schedules[n] = self._plan_network(
+                self.specs, self.geom, batch=n, occupancy=None,
+                overlap=False, integrity=self.integrity)
+        return self._fallback_schedules[n]
+
+    def _forward(self, x: np.ndarray, schedule):
+        """One batched forward through the planned emulation (the seam the
+        recovery ladder — and fault tests — route every attempt through)."""
+        return self._inception.nc_forward(
+            self.params, x, config=self.config, geom=self.geom,
+            engine=self.engine, schedule=schedule, wpack=self.wpack)
 
     def submit(self, req, now: float | None = None) -> None:
         req.arrival_t = self.now_fn() if now is None else now
@@ -294,18 +379,33 @@ class NCServingEngine(BatchQueueEngine):
         batch = [self.queue.pop(0) for _ in range(n)]
         x = np.stack([np.asarray(r.image, np.float32) for r in batch])
         t0 = time.perf_counter()
-        logits, report = self._inception.nc_forward(
-            self.params, x, config=self.config, geom=self.geom,
-            engine=self.engine, schedule=self._schedule_for(len(batch)),
-            wpack=self.wpack)
+        try:
+            logits, report = self._forward(x, self._schedule_for(len(batch)))
+            degraded = None
+        except Exception as e:  # noqa: BLE001 — recovery ladder below
+            logits, report, degraded = self._recover(batch, x, now, e)
+            if logits is None:
+                # unreclaimable: the whole ladder failed — the batch is
+                # marked failed with the error recorded, and the engine
+                # keeps draining the rest of the queue
+                self.steps += 1
+                return True
         wall = time.perf_counter() - t0
-        # calibrate the latency model with the measured batch wall time so
-        # later admissions predict from evidence, not just modeled cycles
-        self.latency_model.observe(len(batch), wall)
+        if degraded is None:
+            # calibrate the latency model with the measured batch wall time
+            # (retried batches fold their TRUE total wall in — the retries
+            # are real latency the next admission must predict around)
+            self.latency_model.observe(len(batch), wall)
+        else:
+            # degraded batches did not execute the plan the model prices;
+            # folding their wall time in would poison later predictions
+            self.latency_model.exclude(len(batch), wall)
+            self.degraded_batches += 1
         self.batch_histogram[n] = self.batch_histogram.get(n, 0) + 1
         for i, r in enumerate(batch):
             r.logits = np.asarray(logits[i])
             r.done = True
+            r.degraded = degraded
             r.latency_s = (now - r.arrival_t) + wall
             if self.slo_s is not None:
                 r.slo_ok = r.latency_s <= self.slo_s
@@ -314,9 +414,61 @@ class NCServingEngine(BatchQueueEngine):
                 else:
                     self.slo_misses += 1
             self.completed.append(r)
-        self.reports.append(report)
+        if report is not None:
+            self.reports.append(report)
         self.steps += 1
         return True
+
+    def _recover(self, batch, x, now: float, err: BaseException):
+        """Degradation ladder for a failed batch (PR 7).
+
+        1. Re-attempt the primary schedule while the oldest request's
+           remaining deadline budget still covers a predicted execution
+           (no SLO: one retry) — transient faults recover here.
+        2. Dense/no-overlap fallback schedule — plan-shape trouble
+           (quarantine storms, overlap/sparsity interactions) recovers
+           here; the batch is excluded from calibration.
+        3. Float reference forward — always numerically available; the
+           result is no longer the emulation's logits, but the request is
+           answered.
+        4. Mark the batch failed (``stats()['errors']`` records why) and
+           keep draining.
+
+        Returns ``(logits, report, degraded_tag)``; logits None means
+        rung 4."""
+        n = len(batch)
+        last = err
+        # rung 1: bounded retries inside the deadline budget
+        retries_left = 1
+        if self.slo_s is not None:
+            budget = self.slo_s - (now - batch[0].arrival_t)
+            predicted = max(self.latency_model.predict_s(n), 1e-9)
+            retries_left = max(0, int(budget / predicted) - 1)
+        while retries_left > 0:
+            retries_left -= 1
+            self.retries += 1
+            try:
+                logits, report = self._forward(x, self._schedule_for(n))
+                return logits, report, None
+            except Exception as e:  # noqa: BLE001
+                last = e
+        # rung 2: most conservative emulated plan (dense, serial)
+        try:
+            logits, report = self._forward(x, self._fallback_schedule_for(n))
+            return logits, report, "fallback-schedule"
+        except Exception as e:  # noqa: BLE001
+            last = e
+        # rung 3: float reference — answers the request outside the emulation
+        try:
+            logits = np.asarray(self._inception.apply(
+                self.params, jnp.asarray(x, jnp.float32), quant=False,
+                config=self.config))
+            return logits, None, "float"
+        except Exception as e:  # noqa: BLE001
+            last = e
+        # rung 4: unreclaimable
+        self._fail_requests(batch, last)
+        return None, None, None
 
     @property
     def slo_hit_rate(self) -> float | None:
@@ -324,8 +476,10 @@ class NCServingEngine(BatchQueueEngine):
         return self.slo_hits / total if total else None
 
     def stats(self) -> dict:
-        """Serving stats: admitted-batch histogram, SLO accounting and the
-        latency model's calibration state."""
+        """Serving stats: admitted-batch histogram, SLO accounting, the
+        latency model's calibration state, and the fault/recovery ledger
+        (failed requests, error log, retries, degraded batches and the
+        calibration exclusions that kept the model honest)."""
         return dict(
             steps=self.steps,
             completed=len(self.completed),
@@ -336,7 +490,13 @@ class NCServingEngine(BatchQueueEngine):
             slo_hit_rate=self.slo_hit_rate,
             calibration_scale=self.latency_model.scale,
             calibration_samples=self.latency_model.samples,
+            calibration_excluded=self.latency_model.excluded,
             stream_batch_limit=self.schedule.stream_batch_limit,
+            integrity=self.integrity,
+            failed=len(self.failed),
+            errors=list(self.errors),
+            retries=self.retries,
+            degraded_batches=self.degraded_batches,
         )
 
     def run(self) -> list[NCRequest]:
@@ -348,21 +508,30 @@ class NCServingEngine(BatchQueueEngine):
 
 
 def _main_neural_cache(args) -> int:
+    import contextlib
+
+    from repro.core import faults
     from repro.core.simulator import simulate_network, throughput
     from repro.models import inception
 
+    profile = (faults.FaultProfile.parse(args.fault_profile)
+               if args.fault_profile else None)
     cfg = inception.reduced_config()
     params = inception.init_params(jax.random.key(0), config=cfg)
     engine = NCServingEngine(params, cfg, max_batch=args.max_batch,
                              overlap=not args.no_overlap,
+                             integrity=profile is not None,
                              slo_ms=args.slo_ms)
     rng = np.random.default_rng(0)
     for r in range(args.requests):
         engine.submit(NCRequest(
             rid=r, image=rng.random((cfg.img, cfg.img, 3),
                                     dtype=np.float32)))
+    scope = (faults.inject(profile) if profile is not None
+             else contextlib.nullcontext())
     t0 = time.perf_counter()
-    done = engine.run()
+    with scope as fs:
+        done = engine.run()
     dt = time.perf_counter() - t0
     # modeled throughput from the engine's own schedule: filter load once
     # per batch + per-image marginal + spill (simulator.throughput), NOT
@@ -383,6 +552,16 @@ def _main_neural_cache(args) -> int:
               f"{s['stream_batch_limit']}, calibration x"
               f"{s['calibration_scale']:.1f} over "
               f"{s['calibration_samples']} batches")
+    if profile is not None:
+        s = engine.stats()
+        fstats = fs.stats()
+        print(f"[serve-nc] faults (seed {fstats['seed']}): "
+              f"{fstats['injected']} injected, {fstats['detected']} "
+              f"detected / {fstats['corrupt_attempts']} corrupt passes, "
+              f"{fstats['reexecuted']} re-executed, quarantined slices "
+              f"{list(fstats['quarantined_slices'])}; serving: "
+              f"{s['retries']} batch retries, {s['degraded_batches']} "
+              f"degraded, {s['failed']} failed")
     return 0
 
 
@@ -403,6 +582,12 @@ def main() -> int:
                     help="per-request latency SLO for --neural-cache: "
                          "batches are sized by the predicted p99 from the "
                          "cycle model (core/slo.py) instead of greedy FIFO")
+    ap.add_argument("--fault-profile", type=str, default=None,
+                    help="seeded fault injection for --neural-cache, e.g. "
+                         "'seed=7,filter=0.05,act=0.01,compute=0.01,"
+                         "stuck=3,stall=0.1:0.002' (core/faults.py); "
+                         "implies integrity checking, prints the "
+                         "detection/recovery ledger")
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-tokens", type=int, default=16)

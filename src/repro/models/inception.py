@@ -403,6 +403,10 @@ class NCLayerReport:
     skipped_passes: int = 0  # zero-filter passes the sparse plan dropped
     zero_filters: int = 0  # pruned filters the engine never ran
     overlap: bool = False  # §IV-E double buffering granted and executed
+    integrity: bool = False  # ABFT checksum verification ran (PR 7)
+    reexec_passes: int = 0  # fault-triggered pass re-executions
+    faults_detected: int = 0  # verification mismatches caught
+    quarantined_slices: tuple = ()  # slices retired by stuck-at recovery
 
 
 @dataclasses.dataclass(frozen=True)
@@ -605,15 +609,23 @@ def _nc_run_conv(name, actq, act_qps, op, wpack, spec, plan, geom, const,
                                int(qp.zero_point))
         out_qps.append(qp)
     cycles += B * plan.quant_passes * _REQUANT_PASS_CYCLES
-    modeled = sim.modeled_layer_cycles(plan, geom, const)
+    # quarantine re-plans mid-layer: price the plan the engine actually
+    # executed, plus the exact per-pass price of each fault re-execution
+    eff_plan = stats.plan if stats.plan is not None else plan
+    modeled = sim.modeled_layer_cycles(eff_plan, geom, const)
     records.append(NCLayerReport(
         name=name, kind="conv", out_shape=tuple(yq.shape),
-        emulated_cycles=int(cycles), modeled_cycles=modeled["total_cycles"],
+        emulated_cycles=int(cycles),
+        modeled_cycles=(modeled["total_cycles"]
+                        + stats.reexec_passes * modeled["reexec_pass_cycles"]),
         serial_passes=modeled["serial_passes"], modeled_s=modeled["total_s"],
         lanes=stats.lanes, zero_operand_lanes=stats.zero_operand_lanes,
         batch=B, minmax_cycles=int(c_mm), filter_loads=stats.filter_loads,
         skipped_passes=modeled["skipped_passes"],
-        zero_filters=stats.zero_filters, overlap=stats.overlap))
+        zero_filters=stats.zero_filters, overlap=stats.overlap,
+        integrity=stats.integrity, reexec_passes=stats.reexec_passes,
+        faults_detected=stats.faults_detected,
+        quarantined_slices=stats.quarantined_slices))
     return yq, out_qps
 
 
@@ -727,15 +739,22 @@ def _nc_stage_gen(x4, config, wpack, specs, plans, geom, const, engine,
                     for qp in act_qps], np.float32)
     logits = (np.asarray(acc, np.float32) * sxw[:, None]
               + fc_bias[None, :].astype(np.float32))
-    modeled = sim.modeled_layer_cycles(plans["FullyConnected"], geom, const)
+    eff_plan = (stats.plan if stats.plan is not None
+                else plans["FullyConnected"])
+    modeled = sim.modeled_layer_cycles(eff_plan, geom, const)
     records.append(NCLayerReport(
         name="FullyConnected", kind="fc", out_shape=tuple(logits.shape),
-        emulated_cycles=int(cycles), modeled_cycles=modeled["total_cycles"],
+        emulated_cycles=int(cycles),
+        modeled_cycles=(modeled["total_cycles"]
+                        + stats.reexec_passes * modeled["reexec_pass_cycles"]),
         serial_passes=modeled["serial_passes"], modeled_s=modeled["total_s"],
         lanes=stats.lanes, zero_operand_lanes=stats.zero_operand_lanes,
         batch=x4.shape[0], filter_loads=stats.filter_loads,
         skipped_passes=modeled["skipped_passes"],
-        zero_filters=stats.zero_filters, overlap=stats.overlap))
+        zero_filters=stats.zero_filters, overlap=stats.overlap,
+        integrity=stats.integrity, reexec_passes=stats.reexec_passes,
+        faults_detected=stats.faults_detected,
+        quarantined_slices=stats.quarantined_slices))
     state["logits"] = logits
     yield "FullyConnected"
 
@@ -760,6 +779,10 @@ def _merge_chunk_records(per_chunk: list[list[NCLayerReport]],
             batch=B,
             minmax_cycles=sum(r.minmax_cycles for r in recs),
             filter_loads=sum(r.filter_loads for r in recs),
+            reexec_passes=sum(r.reexec_passes for r in recs),
+            faults_detected=sum(r.faults_detected for r in recs),
+            quarantined_slices=tuple(sorted(
+                {s for r in recs for s in r.quarantined_slices})),
         ))
     return merged
 
@@ -773,6 +796,7 @@ def nc_forward(params: dict, x: jax.Array,
                wpack: dict | None = None,
                sparse: bool = False,
                overlap: bool = False,
+               integrity: bool = False,
                stream_chunk: int | None = None):
     """Quantized Inception forward pass through the bit-serial emulation.
 
@@ -812,6 +836,16 @@ def nc_forward(params: dict, x: jax.Array,
     the plan made here — a precomputed ``schedule`` already decided, and
     combining the two raises.
 
+    ``integrity=True`` plans ABFT checksum verification (PR 7): every
+    executed pass is verified against exact column/row checksums, detected
+    corruption triggers bounded re-execution (and stuck-slice quarantine +
+    re-plan under an active ``core.faults`` scope), and the modeled cycles
+    pay the additive ``checksum_pass_cycles`` term.  Logits stay
+    byte-identical to the unchecked run — verification never perturbs the
+    data path.  Like the other plan flags it raises when combined with an
+    explicit ``schedule`` (build that with ``plan_network(...,
+    integrity=True)`` instead).
+
     ``stream_chunk=N`` additionally streams the batch through the network
     in chunks of ``N`` images advanced in a skewed wavefront — layer L of
     chunk i computes while chunk i+1 runs layer L-1 (cross-layer §VI-C
@@ -839,6 +873,10 @@ def nc_forward(params: dict, x: jax.Array,
         raise ValueError("request overlap through the schedule "
                          "(plan_network(..., overlap=True)); overlap= with "
                          "an explicit schedule is ambiguous")
+    if schedule is not None and integrity:
+        raise ValueError("request integrity through the schedule "
+                         "(plan_network(..., integrity=True)); integrity= "
+                         "with an explicit schedule is ambiguous")
     if schedule is not None and stream_chunk is not None:
         raise ValueError("stream_chunk replans per chunk; it cannot honor "
                          "an explicit whole-batch schedule")
@@ -854,7 +892,8 @@ def nc_forward(params: dict, x: jax.Array,
         gens = []
         for xc in chunks:
             sc = sched.plan_network(specs_list, geom, batch=xc.shape[0],
-                                    occupancy=occ, overlap=overlap)
+                                    occupancy=occ, overlap=overlap,
+                                    integrity=integrity)
             recs: list[NCLayerReport] = []
             st = {"concat_requant_cycles": 0}
             per_records.append(recs)
@@ -883,7 +922,8 @@ def nc_forward(params: dict, x: jax.Array,
 
     if schedule is None:
         schedule = sched.plan_network(specs_list, geom, batch=B,
-                                      occupancy=occ, overlap=overlap)
+                                      occupancy=occ, overlap=overlap,
+                                      integrity=integrity)
     plans = {p.spec.name: p for p in schedule.layers}
     records: list[NCLayerReport] = []
     state = {"concat_requant_cycles": 0}

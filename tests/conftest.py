@@ -12,17 +12,23 @@ core/bitserial.py keeps three pieces of process-wide state:
 
 The autouse fixture resets the first two around every test so sparsity
 sweeps (tests/test_sparsity.py) and skip-accounting asserts can never
-order-depend on whatever ran before them.
+order-depend on whatever ran before them.  It also clears
+``core/faults._ACTIVE`` — ``faults.inject`` restores it on exit, but a
+test that fails INSIDE the scope must not leak an active fault
+environment into whatever runs next.
 """
 import pytest
 
 from repro.core import bitserial as bs
+from repro.core import faults
 
 
 @pytest.fixture(autouse=True)
 def _isolate_engine_state():
     bs.SKIP_STATS.reset()
+    faults._ACTIVE = None
     zero_skip = bs.ZERO_SKIP
     yield
     bs.ZERO_SKIP = zero_skip
     bs.SKIP_STATS.reset()
+    faults._ACTIVE = None

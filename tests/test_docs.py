@@ -139,7 +139,10 @@ def test_fenced_commands_runnable(doc):
         for j, t in enumerate(toks):
             if t.endswith(".py") and not _path_exists(t):
                 bad.append(f"{t} (from: {line})")
-            if t == "-m" and j + 1 < len(toks):
+            # `-m` names a python module only right after the interpreter
+            # (pytest's `-m <marker>` expression is not an import target)
+            if (t == "-m" and j + 1 < len(toks) and j > 0
+                    and toks[j - 1].rsplit("/", 1)[-1].startswith("python")):
                 mod = toks[j + 1]
                 try:
                     importlib.import_module(mod)
@@ -151,9 +154,11 @@ def test_fenced_commands_runnable(doc):
 
 
 def test_docs_cover_required_pages():
-    """The ISSUE-5 docs subsystem: architecture + serving + README."""
+    """The ISSUE-5 docs subsystem (+ the ISSUE-7 reliability page):
+    architecture + serving + reliability + README."""
     names = {d.name for d in DOCS}
-    assert {"README.md", "ARCHITECTURE.md", "SERVING.md"} <= names
+    assert {"README.md", "ARCHITECTURE.md", "SERVING.md",
+            "RELIABILITY.md"} <= names
 
 
 def test_resolver_catches_rot():
