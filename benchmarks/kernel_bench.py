@@ -130,6 +130,7 @@ def _emulation_rows():
                     f"{report.total_emulated_cycles} emulated cycles"))
     out.extend(_sparsity_rows())
     out.extend(_overlap_rows())
+    out.extend(_compressed_rows())
     return out
 
 
@@ -348,6 +349,105 @@ def _overlap_rows():
     return out
 
 
+def _compressed_rows():
+    """Compressed-vs-dense record pair (ISSUE 8): reduced_config at batch
+    4 with the fixed 50% filter pruning, executed from the dense filter
+    store (every filter runs) and from the CSR bit-plane store through
+    the compressed sparse schedule.  GATES, any failure raises like the
+    sparsity/overlap gates: (1) the compressed schedule must keep no more
+    than 0.55x the dense schedule's ``filter_bytes_loaded`` resident —
+    the modeled §IV-A residency win the simulator credits exactly; (2)
+    compressed wall time must not regress past dense; (3) logits must be
+    byte-identical (decompression scatters live columns into zero words,
+    the multiply identity).  Interleaved min-of-3 as in
+    :func:`_sparsity_rows` so shared-host noise cancels."""
+    import time
+
+    import jax as _jax
+    from repro.core import schedule as nc_sched
+    from repro.core.cache_geometry import XEON_E5_35MB
+    from repro.models import inception
+
+    cfg = inception.reduced_config()
+    params = inception.init_params(_jax.random.PRNGKey(0), config=cfg)
+    wpack = inception.prune_wpack(
+        inception.prepare_conv_weights(params, cfg), 0.5)
+    xb = np.asarray(_jax.random.uniform(
+        _jax.random.PRNGKey(1), (4, cfg.img, cfg.img, 3), jnp.float32))
+
+    # modeled residency gate first — deterministic, no timing noise
+    specs = inception.inception_v3_specs(cfg)
+    occ = inception.network_occupancy(wpack, cfg)
+    dense_plan = nc_sched.plan_network(specs, XEON_E5_35MB, batch=4)
+    comp_plan = nc_sched.plan_network(specs, XEON_E5_35MB, batch=4,
+                                      occupancy=occ, compressed=True)
+    fbl_ratio = comp_plan.filter_bytes_loaded / dense_plan.filter_bytes_loaded
+    if fbl_ratio > 0.55:
+        raise RuntimeError(
+            f"compression gate: compressed schedule keeps {fbl_ratio:.3f}x "
+            f"the dense filter bytes resident at 50% pruning — must be "
+            f"<= 0.55x")
+
+    wall_d = wall_c = float("inf")
+    logits_d = logits_c = None
+    for _ in range(3):
+        t0 = time.perf_counter()
+        logits_d, _ = inception.nc_forward(params, xb, config=cfg,
+                                           wpack=wpack)
+        wall_d = min(wall_d, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        logits_c, rep_c = inception.nc_forward(params, xb, config=cfg,
+                                               wpack=wpack, sparse=True,
+                                               compressed=True)
+        wall_c = min(wall_c, time.perf_counter() - t0)
+    if not np.array_equal(np.asarray(logits_d), np.asarray(logits_c)):
+        raise RuntimeError("compression gate: CSR-store nc_forward logits "
+                           "diverge from the dense store on the same "
+                           "pruned weights")
+    if wall_c > wall_d:
+        raise RuntimeError(
+            f"compression gate: compressed wall time {wall_c * 1e3:.0f} ms "
+            f"exceeds dense {wall_d * 1e3:.0f} ms on the fixed 50% pruning")
+    shape = f"{cfg.img}px /4 widths, batch 4, 50% filters zero"
+    return [
+        _rec("emulation/nc_forward_b4_pruned50_densestore", wall_d * 1e6,
+             shape, f"{wall_d / 4 * 1e3:.0f} ms/img; full dense residency "
+             f"({dense_plan.filter_bytes_loaded} filter bytes)"),
+        _rec("emulation/nc_forward_b4_pruned50_csr", wall_c * 1e6, shape,
+             f"{wall_c / 4 * 1e3:.0f} ms/img; CSR bit-plane store, "
+             f"{fbl_ratio:.3f}x dense residency (credit "
+             f"{comp_plan.residency_credit_bytes} B/batch), "
+             f"{wall_d / wall_c:.2f}x vs dense"),
+    ]
+
+
+def _compressed_smoke_rows():
+    """``--quick`` compressed smoke (ISSUE 8): a small half-pruned conv
+    executed from the CSR bit-plane store — GATE: byte-identical to the
+    dense store.  Subsecond, registers a retimer like the kernel rows."""
+    from repro.core import nc_layers as nc
+    from repro.core import quantize as q
+
+    rng = np.random.default_rng(0)
+    wq = rng.integers(0, 256, size=(3, 3, 4, 16)).astype(np.uint8)
+    wq[..., 8:] = 7  # half the filters at the zero point
+    w_qp = q.QuantParams(scale=np.float32(0.05), zero_point=7)
+    x = rng.uniform(-1, 1, (2, 10, 10, 4)).astype(np.float32)
+    x_qp = q.choose_qparams(jnp.float32(x.min()), jnp.float32(x.max()))
+    dense, _ = nc.nc_conv2d(x, wq, [x_qp] * 2, w_qp, padding="SAME")
+    comp, _ = nc.nc_conv2d(x, wq, [x_qp] * 2, w_qp, padding="SAME",
+                           occupancy="detect", compressed=True)
+    if not np.array_equal(np.asarray(comp), np.asarray(dense)):
+        raise RuntimeError("compression smoke gate: CSR-store conv diverges "
+                           "from the dense store")
+    return [_timed_rec(
+        "emulation/csr_conv_smoke",
+        lambda: nc.nc_conv2d(x, wq, [x_qp] * 2, w_qp, padding="SAME",
+                             occupancy="detect", compressed=True), 5,
+        "2x 10x10x4 * 3x3x4x16, 50% pruned",
+        "CSR bit-plane store, byte-identical to dense")]
+
+
 # checksum verification may not cost more than this multiple of the
 # unchecked conv wall/cycles on the _fault_rows workload — the recorded
 # bound the fault gate enforces (the modeled overhead is one extra lane
@@ -445,14 +545,16 @@ def run():
     out = _kernel_rows()
     out.extend(_emulation_rows())
     out.extend(_fault_rows())
+    out.extend(_compressed_smoke_rows())
     return out
 
 
 def run_quick():
-    """``kernel/*`` + fault-gate records — subsecond; ``benchmarks.run
-    --quick``."""
+    """``kernel/*`` + fault-gate + compressed-smoke records — subsecond;
+    ``benchmarks.run --quick``."""
     RECORDS.clear()
     RETIMERS.clear()
     out = _kernel_rows()
     out.extend(_fault_rows())
+    out.extend(_compressed_smoke_rows())
     return out

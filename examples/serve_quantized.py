@@ -15,6 +15,8 @@ Run:  PYTHONPATH=src python examples/serve_quantized.py
       PYTHONPATH=src python examples/serve_quantized.py --neural-cache --slo-ms 5000
       PYTHONPATH=src python examples/serve_quantized.py --neural-cache \
           --fault-profile seed=7,filter=0.1,compute=0.05
+      PYTHONPATH=src python examples/serve_quantized.py --neural-cache \
+          --compressed --warmup-replan
 """
 import argparse
 import time
@@ -46,7 +48,9 @@ def dequantize_tree(qparams):
 
 
 def main_neural_cache(slo_ms: float, requests: int = 6,
-                      fault_profile: str | None = None) -> None:
+                      fault_profile: str | None = None,
+                      compressed: bool = False,
+                      warmup_replan: bool = False) -> None:
     """SLO-aware Neural Cache serving (§VI-C batching under a deadline).
 
     Submits ``requests`` images to an :class:`NCServingEngine` armed with
@@ -56,6 +60,13 @@ def main_neural_cache(slo_ms: float, requests: int = 6,
     grow to keep the predicted p99 under the remaining deadline budget.
     Logits are asserted bit-identical to standalone ``nc_forward`` runs —
     the SLO knob changes batch sizes, never results.
+
+    ``--compressed`` plans and executes from the ISSUE 8 CSR bit-plane
+    filter store (residency credit and any raised streaming ceiling show
+    up in the printed stats); ``--warmup-replan`` re-plans the engine
+    after the first batch from measured occupancy.  Both are
+    accounting/plan knobs — the closing assertion still demands logits
+    byte-identical to a plain dense standalone forward.
 
     ``--fault-profile`` (e.g. ``seed=7,filter=0.1,compute=0.05``) scopes
     seeded fault injection (core/faults.py) over the run with integrity
@@ -72,7 +83,9 @@ def main_neural_cache(slo_ms: float, requests: int = 6,
                                    stages=("a",))
     params = inception.init_params(jax.random.key(0), config=cfg)
     eng = NCServingEngine(params, cfg, max_batch=4, slo_ms=slo_ms,
-                          integrity=profile is not None)
+                          integrity=profile is not None,
+                          compressed=compressed,
+                          warmup_replan=warmup_replan)
     rng = np.random.default_rng(0)
     imgs = rng.random((requests, cfg.img, cfg.img, 3)).astype(np.float32)
     for r in range(requests):
@@ -92,6 +105,10 @@ def main_neural_cache(slo_ms: float, requests: int = 6,
           f"{s['slo_hit_rate']:.0%}); latency model calibrated x"
           f"{s['calibration_scale']:.0f} wall/modeled over "
           f"{s['calibration_samples']} batches")
+    if compressed or warmup_replan:
+        print(f"[serve-nc] compressed={s['compressed']} residency credit "
+              f"{s['residency_credit_bytes']} B/batch, "
+              f"{s['warmup_replans']} warmup re-plan(s)")
     if profile is not None:
         fstats = fs.stats()
         print(f"[serve-nc] faults (seed {fstats['seed']}): "
@@ -150,8 +167,18 @@ if __name__ == "__main__":
                     help="seeded fault injection for --neural-cache "
                          "(core/faults.py spec, e.g. 'seed=7,filter=0.1'); "
                          "implies integrity checking")
+    ap.add_argument("--compressed", action="store_true",
+                    help="plan + execute --neural-cache from the CSR "
+                         "bit-plane filter store (ISSUE 8); logits stay "
+                         "byte-identical")
+    ap.add_argument("--warmup-replan", action="store_true",
+                    help="re-plan --neural-cache after the first batch "
+                         "from measured occupancy (warmup batch excluded "
+                         "from calibration)")
     args = ap.parse_args()
     if args.neural_cache:
-        main_neural_cache(args.slo_ms, args.requests, args.fault_profile)
+        main_neural_cache(args.slo_ms, args.requests, args.fault_profile,
+                          compressed=args.compressed,
+                          warmup_replan=args.warmup_replan)
     else:
         main()

@@ -139,6 +139,7 @@ __all__ = [
     "engine_cache_info",
     "engine_cache_clear",
     "filter_occupancy",
+    "CompressedPlanes",
     "SKIP_STATS",
 ]
 
@@ -296,6 +297,100 @@ class PackedPlanes:
 jax.tree_util.register_dataclass(
     PackedPlanes, data_fields=["words"], meta_fields=["lane_shape", "row_lanes"]
 )
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressedPlanes:
+    """CSR-style per-bit-plane filter store (ISSUE 8, EIE-inspired).
+
+    The sibling of :class:`PackedPlanes` for RESIDENT filters: instead of
+    a dense ``(n_planes, n_columns, ...)`` word grid (one column per
+    filter), each bit plane keeps only its LIVE columns — the filters
+    with at least one set bit in that plane — as a sorted column index
+    plus their packed words.  Planes with no set bit anywhere store
+    nothing at all; a pruned (all-zero-plane) filter column appears in no
+    plane's index.  :meth:`dense` reconstructs the original grid
+    byte-identically (round trip asserted by tests/test_sparsity.py), so
+    the packed MAC+reduce consumes exactly the words it would have seen
+    uncompressed.
+
+    The modeled residency of this store is
+    ``mapper.compressed_filter_bytes`` (live-plane payload + per-plane
+    live-column bitmap); :attr:`index_bytes` mirrors the bitmap term."""
+
+    column_index: tuple[np.ndarray, ...]  # per plane: sorted int32 live cols
+    columns: tuple[np.ndarray, ...]  # per plane: (n_live, *tail) uint32 words
+    n_columns: int  # dense column (filter) count
+    tail_shape: tuple[int, ...]  # per-column word shape of the dense grid
+
+    @property
+    def n_planes(self) -> int:
+        return len(self.column_index)
+
+    @property
+    def live_planes(self) -> int:
+        """Planes with at least one live column (the only ones stored)."""
+        return sum(1 for idx in self.column_index if idx.size)
+
+    @property
+    def payload_bytes(self) -> int:
+        """Bytes of packed words actually stored (live columns only)."""
+        return sum(int(c.nbytes) for c in self.columns)
+
+    @property
+    def index_bytes(self) -> int:
+        """Per-plane live-column bitmap bytes (one bit per filter column,
+        byte-rounded, live planes only) — the CSR index overhead."""
+        return self.live_planes * (-(-self.n_columns // 8))
+
+    @property
+    def nbytes(self) -> int:
+        return self.payload_bytes + self.index_bytes
+
+    @classmethod
+    def compress(cls, words) -> "CompressedPlanes":
+        """Compress a dense per-plane filter word grid ``(n_planes,
+        n_columns, ...)`` uint32 (e.g. the packed filter block the engine
+        feeds ``packed_dot_words``) into CSR-per-plane form."""
+        grid = np.asarray(words, np.uint32)
+        if grid.ndim < 2:
+            raise ValueError(
+                f"expected (n_planes, n_columns, ...) words, got {grid.shape}")
+        flat = grid.reshape(grid.shape[0], grid.shape[1], -1)
+        live = flat.any(axis=2)  # (n_planes, n_columns)
+        index = tuple(np.flatnonzero(live[p]).astype(np.int32)
+                      for p in range(grid.shape[0]))
+        cols = tuple(np.ascontiguousarray(grid[p, index[p]])
+                     for p in range(grid.shape[0]))
+        return cls(column_index=index, columns=cols,
+                   n_columns=int(grid.shape[1]),
+                   tail_shape=tuple(grid.shape[2:]))
+
+    def dense(self) -> np.ndarray:
+        """Reconstruct the dense ``(n_planes, n_columns, *tail_shape)``
+        word grid, byte-identical to what :meth:`compress` consumed —
+        dead columns and dead planes come back as zero words (a zero
+        word is the multiply's identity, so consumers are unchanged)."""
+        return self.dense_columns(0, self.n_columns)
+
+    def dense_columns(self, start: int, stop: int) -> np.ndarray:
+        """Reconstruct columns ``[start, stop)`` of the dense grid — the
+        per-tile filter slice the packed engine consumes — without
+        materializing the rest (the CSR index is sorted, so the slice is
+        two binary searches per plane)."""
+        if not (0 <= start <= stop <= self.n_columns):
+            raise ValueError(
+                f"columns [{start}, {stop}) out of range for "
+                f"{self.n_columns}")
+        grid = np.zeros((self.n_planes, stop - start) + self.tail_shape,
+                        np.uint32)
+        for p, (idx, cols) in enumerate(zip(self.column_index, self.columns)):
+            if idx.size:
+                lo = int(np.searchsorted(idx, start))
+                hi = int(np.searchsorted(idx, stop))
+                if lo < hi:
+                    grid[p, idx[lo:hi] - start] = cols[lo:hi]
+        return grid
 
 
 def _grid_bits_np(flat: np.ndarray, lane_shape: tuple[int, ...],

@@ -25,7 +25,7 @@ from typing import Iterable, Literal
 from repro.core.cache_geometry import CacheGeometry, XEON_E5_35MB
 
 __all__ = ["LayerSpec", "MappedLayer", "map_layer", "map_network",
-           "serial_passes_for"]
+           "serial_passes_for", "compressed_filter_bytes"]
 
 MAX_FILTER_BYTES_PER_LINE = 9  # filter splitting threshold (§IV-A)
 MAX_PACK_BYTES = 16  # 1x1 filter packing factor (§IV-A)
@@ -106,6 +106,34 @@ def pass_filter_bytes(filter_bytes: int, passes: int) -> int:
     if filter_bytes <= 0:
         return 0
     return math.ceil(filter_bytes / max(passes, 1))
+
+
+def compressed_filter_bytes(resident_bytes: int, total_filters: int,
+                            plane_bits: int = 8,
+                            live_planes: int | None = None) -> int:
+    """Resident bytes of the CSR bit-plane filter store (EIE-style
+    compressed §IV-A residency) — 0 when the layer loads nothing.
+
+    ``resident_bytes`` is the uncompressed residency of the live filter
+    set (pruned columns are already not stored).  Compression keeps only
+    the ``live_planes`` bit planes that contain any set bit — the payload
+    scales by the live-plane fraction — plus, per live plane, a
+    live-column bitmap over the layer's ``total_filters`` columns (the
+    CSR index: one bit per filter column, byte-rounded).
+
+    The ONE compressed-residency rule shared by core/schedule.py's
+    ``plan_layer(compressed=True)`` (residency, per-pass streaming and
+    overlap headroom all derive from it) and the simulator's residency
+    credit (dense − compressed priced at filter bandwidth), so planner
+    and pricer can never disagree on what compression saves."""
+    if resident_bytes <= 0:
+        return 0
+    if live_planes is None:
+        live_planes = plane_bits
+    live_planes = max(0, min(int(live_planes), int(plane_bits)))
+    payload = math.ceil(resident_bytes * live_planes / max(plane_bits, 1))
+    index = live_planes * math.ceil(max(total_filters, 1) / 8)
+    return payload + index
 
 
 @dataclasses.dataclass(frozen=True)

@@ -105,6 +105,11 @@ class ConvStats:
     integrity_cycles: int = 0  # §III cycles charged for checksum columns
     reexec_cycles: int = 0  # §III cycles charged for pass re-executions
     quarantined_slices: tuple = ()  # slices lost to repeated failures
+    # ISSUE 8 compressed residency (all zero/False when the plan is
+    # uncompressed — the dense store runs bit for bit)
+    compressed: bool = False  # filters lived CSR-per-bit-plane resident
+    csr_payload_bytes: int = 0  # measured packed-word bytes of the store
+    csr_index_bytes: int = 0  # measured per-plane live-column index bytes
     # the plan actually executed — differs from the caller's only after a
     # quarantine re-plan (excluded from equality: plans carry the spec)
     plan: object = dataclasses.field(default=None, compare=False, repr=False)
@@ -248,6 +253,7 @@ def nc_conv2d(
     engine: str = "host",
     overlap: bool = False,
     integrity: bool = False,
+    compressed: bool = False,
     return_stats: bool = False,
 ):
     """Quantized conv through the array model (packed-resident + tiled).
@@ -320,6 +326,17 @@ def nc_conv2d(
     original unchecked loop runs bit for bit.  Like sparsity and overlap,
     integrity is a plan decision: ``integrity=True`` alongside an
     explicit plan raises.
+
+    Compressed filter residency (ISSUE 8, ``compressed=True`` or a plan
+    that set it): the layer's resident filter store is the CSR-per-bit-
+    plane :class:`~repro.core.bitserial.CompressedPlanes` — live columns
+    of live planes only — and each tile's filter slice is reconstructed
+    from it before the packed MAC+reduce.  Dead columns/planes come back
+    as zero words (the multiply's identity), so outputs are BYTE-
+    IDENTICAL to dense execution at every pruning level
+    (tests/test_sparsity.py's differential sweep).  Like sparsity,
+    overlap and integrity, compression is a plan decision:
+    ``compressed=True`` alongside an explicit plan raises.
     """
     xin = np.asarray(x)
     batched = xin.ndim == 4
@@ -373,6 +390,10 @@ def nc_conv2d(
         raise ValueError("request integrity through the plan "
                          "(plan_layer(..., integrity=True)); integrity= "
                          "with an explicit plan is ambiguous")
+    if compressed and not replan:
+        raise ValueError("request compression through the plan "
+                         "(plan_layer(..., compressed=True)); compressed= "
+                         "with an explicit plan is ambiguous")
     if replan:
         occ = occupancy
         if isinstance(occ, str):
@@ -387,11 +408,13 @@ def nc_conv2d(
                 occ = plan.occupancy  # tile overrides must not drop sparsity
             overlap = overlap or plan.overlap  # ... nor drop double buffering
             integrity = integrity or plan.integrity  # ... nor drop checking
+            compressed = compressed or plan.compressed  # ... nor decompress
             quarantined = plan.quarantined_slices
         plan = sched.plan_layer(spec, geom, batch=B, tile_pixels=tile_pixels,
                                 tile_filters=tile_filters, occupancy=occ,
                                 overlap=overlap, integrity=integrity,
-                                quarantined_slices=quarantined)
+                                quarantined_slices=quarantined,
+                                compressed=compressed)
     tile_rows = max(1, min(plan.tile_rows, rows_total))
     tile_filters = max(1, min(plan.tile_filters, M))
 
@@ -419,11 +442,23 @@ def nc_conv2d(
     w_rows_live = w_rows if live_idx is None else w_rows[live_idx]
     M_live = w_rows_live.shape[0]
     overlap_exec = bool(plan.overlap)
+    compressed_exec = bool(plan.compressed)
     # filters packed once per layer per batch; tiles slice the word grid.
     # Under §IV-E double buffering the pack is deferred to the per-tile
     # load stage instead (each tile's columns still pack exactly once).
-    ww_all = (_pack_w_rows(w_rows_live, w_qp.bits)
-              if M_live and not overlap_exec else None)
+    # Compressed plans (ISSUE 8) keep the CSR-per-bit-plane store resident
+    # instead of the dense grid; tiles reconstruct their column slice.
+    ww_all = cw_all = None
+    if M_live and not overlap_exec:
+        grid = _pack_w_rows(w_rows_live, w_qp.bits)
+        if compressed_exec:
+            cw_all = bs.CompressedPlanes.compress(grid)
+        else:
+            ww_all = grid
+        del grid
+    csr_bytes = [0, 0]  # measured (payload, index) bytes of the CSR store
+    if cw_all is not None:
+        csr_bytes = [cw_all.payload_bytes, cw_all.index_bytes]
 
     skip0_words = bs.SKIP_STATS.words_total
     skip0_skipped = bs.SKIP_STATS.words_skipped
@@ -448,8 +483,20 @@ def nc_conv2d(
         ww = w_cache.get(mi)
         if ww is None:
             m0, m1 = m_tiles[mi]
-            ww = (ww_all[:, m0:m1] if ww_all is not None
-                  else _pack_w_rows(w_rows_live[m0:m1], w_qp.bits))
+            if cw_all is not None:
+                ww = cw_all.dense_columns(m0, m1)
+            elif ww_all is not None:
+                ww = ww_all[:, m0:m1]
+            else:
+                ww = _pack_w_rows(w_rows_live[m0:m1], w_qp.bits)
+                if compressed_exec:
+                    # §IV-E overlap defers packing per tile: the tile's
+                    # columns still live CSR-compressed and reconstruct
+                    # byte-identically before the MAC
+                    cp = bs.CompressedPlanes.compress(ww)
+                    csr_bytes[0] += cp.payload_bytes
+                    csr_bytes[1] += cp.index_bytes
+                    ww = cp.dense()
             if engine == "jit" and m1 - m0 < bf:
                 pad = ((0, 0), (0, bf - (m1 - m0))) + ((0, 0),) * (ww.ndim - 2)
                 ww = np.pad(ww, pad)
@@ -598,7 +645,8 @@ def nc_conv2d(
                     tile_pixels=tile_rows, tile_filters=tile_filters,
                     occupancy=plan.occupancy, overlap=plan.overlap,
                     integrity=True,
-                    quarantined_slices=tuple(sorted(fs.quarantined)))
+                    quarantined_slices=tuple(sorted(fs.quarantined)),
+                    compressed=plan.compressed)
                 attempts = 0
             _store(v2, pi, mi)
     else:
@@ -675,6 +723,9 @@ def nc_conv2d(
         integrity_cycles=integrity_cycles,
         reexec_cycles=reexec_cycles,
         quarantined_slices=eff_plan.quarantined_slices,
+        compressed=compressed_exec,
+        csr_payload_bytes=csr_bytes[0],
+        csr_index_bytes=csr_bytes[1],
         plan=eff_plan,
     )
     return result, total_cycles, stats

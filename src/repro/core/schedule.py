@@ -68,7 +68,10 @@ Only the deterministic filter occupancy changes numbers, and only when
 present: ``occupancy=None`` (or zero detected sparsity) plans are
 field-for-field identical to dense plans, and the simulator's dense
 outputs stay bit-identical.  ``stream_batch_limit`` is intentionally
-pruning-independent (activations stream at full width either way).
+pruning-independent (activations stream at full width either way) —
+until compression (ISSUE 8) opts the plan into the tighter staging
+accounting that lets shrinking residency raise the ceiling (see
+``NetworkSchedule.stream_batch_limit``).
 
 Consumers (the "one source of truth" contract):
 
@@ -95,8 +98,8 @@ import numpy as np
 from repro.core import bitserial as bs
 from repro.core.cache_geometry import CacheGeometry, XEON_E5_35MB
 from repro.core.mapper import (LayerSpec, MappedLayer, check_wordline_budget,
-                               map_layer, pass_filter_bytes,
-                               serial_passes_for)
+                               compressed_filter_bytes, map_layer,
+                               pass_filter_bytes, serial_passes_for)
 
 __all__ = ["LayerOccupancy", "PassStage", "SlicePlan", "NetworkSchedule",
            "conv_tiles", "plan_layer", "plan_network", "prune_occupancy"]
@@ -155,6 +158,12 @@ class LayerOccupancy:
     plane_bits: int = 8
     dead_planes: int = 0
     activation_sparsity: float = 0.0  # est. zero fraction of INPUT lanes
+    # MEASURED live output lanes per image (ISSUE 8 warmup re-planning):
+    # None = unmeasured, the estimate above stays advisory.  When set, the
+    # §IV-D requant pass count shrinks to the live output set — zero output
+    # lanes requantize to the analytically-known zero point, the same
+    # affine-identity argument that lets zero-filter passes skip.
+    live_outputs: int | None = None
 
     def __post_init__(self):
         zf = tuple(sorted(int(i) for i in set(self.zero_filters)))
@@ -272,6 +281,15 @@ class SlicePlan:
     # re-serialized over the surviving slices (the fault path's analogue of
     # the pruned-pass machinery); () <=> full slice pool, numbers untouched
     quarantined_slices: tuple[int, ...] = ()
+    # ISSUE 8 compressed residency: filters stored CSR-style per bit plane
+    # (bitserial.CompressedPlanes) — ``filter_bytes`` above is then the
+    # compressed footprint (mapper.compressed_filter_bytes over the live
+    # set) and ``dense_filter_bytes`` keeps the uncompressed residency the
+    # simulator's exact credit is measured against.  compressed=False plans
+    # and their consumers are bit-identical to the uncompressed behavior
+    # (same invariant idiom as occupancy/overlap/integrity above).
+    compressed: bool = False
+    dense_filter_bytes: int = 0  # uncompressed live-set residency (credit ref)
 
     @property
     def is_compute(self) -> bool:
@@ -282,6 +300,16 @@ class SlicePlan:
         """Serialized passes the engine actually runs per image: the dense
         §IV-B count minus the skipped-pass credit."""
         return self.serial_passes - self.skipped_passes
+
+    @property
+    def residency_credit_bytes(self) -> int:
+        """Filter bytes compression keeps out of the §VI-C per-batch load:
+        uncompressed live-set residency minus the compressed footprint.
+        The simulator prices exactly this at filter bandwidth (and the
+        credit can be slightly negative for a dense, unpruned layer —
+        the CSR index is honest overhead)."""
+        return (self.dense_filter_bytes - self.filter_bytes
+                if self.compressed else 0)
 
     def pass_stages(self) -> tuple[PassStage, ...]:
         """The layer's serialized passes as explicit (load, compute) stages
@@ -311,7 +339,8 @@ def plan_layer(spec: LayerSpec,
                occupancy: LayerOccupancy | None = None,
                overlap: bool = False,
                integrity: bool = False,
-               quarantined_slices: Sequence[int] = ()) -> SlicePlan:
+               quarantined_slices: Sequence[int] = (),
+               compressed: bool = False) -> SlicePlan:
     """Map one layer (§IV-A/B) and schedule it for ``batch`` images.
 
     ``occupancy`` makes value sparsity an input to the plan: passes whose
@@ -351,7 +380,19 @@ def plan_layer(spec: LayerSpec,
     lost to repeated integrity failures from the §IV-B replication pool:
     the SAME serialization rule re-runs over the surviving parallelism, so
     pass counts (and their pricing) grow honestly while the layout stays
-    the mapper's."""
+    the mapper's.
+
+    ``compressed=True`` stores the live filter set CSR-style per bit plane
+    (ISSUE 8): ``filter_bytes`` becomes the compressed footprint —
+    ``mapper.compressed_filter_bytes`` over the live-set residency, live
+    bit planes only plus the per-plane live-column index — and
+    ``dense_filter_bytes`` records the uncompressed residency so the
+    simulator can price the delta as an exact additive credit.
+    ``filter_bytes_per_pass`` (and with it the §IV-E overlap headroom
+    check) derives from the compressed bytes through the SAME
+    ``mapper.pass_filter_bytes`` rule, so streaming, overlap legality and
+    pricing all shrink consistently.  ``compressed=False`` plans are
+    field-for-field identical to uncompressed ones."""
     mapped = map_layer(spec, geom)
     E = F = spec.E
     skipped = 0
@@ -394,6 +435,13 @@ def plan_layer(spec: LayerSpec,
                 occupancy.n_live * E * F, parallel)
             skipped = base_serial - live_passes
             filter_bytes = spec.R * spec.S * spec.C * occupancy.n_live
+            if occupancy.live_outputs is not None:
+                # warmup-measured live output lanes (ISSUE 8): the §IV-D
+                # lockstep requant runs over the live set only — zero
+                # lanes fill with the analytically-known zero point
+                live_out = max(0, min(int(occupancy.live_outputs),
+                                      spec.output_bytes))
+                quant_passes = math.ceil(live_out / geom.compute_slots)
     else:  # pooling: no filters, no requantization — comparisons in place
         K = spec.filter_elems
         tr, tf = batch * E * F, 1
@@ -402,6 +450,17 @@ def plan_layer(spec: LayerSpec,
         filter_bytes = 0
         quant_passes = 0
         minmax = 0
+    compressed = bool(compressed) and spec.kind in ("conv", "fc")
+    dense_resident = filter_bytes if compressed else 0
+    if compressed:
+        # CSR bit-plane residency (ISSUE 8): the ONE compressed-residency
+        # rule — everything downstream (per-pass streaming, overlap
+        # headroom, the simulator's credit) derives from this footprint
+        plane_bits = occupancy.plane_bits if occupancy is not None else 8
+        live_planes = (plane_bits - occupancy.dead_planes
+                       if occupancy is not None else plane_bits)
+        filter_bytes = compressed_filter_bytes(
+            dense_resident, spec.M, plane_bits, live_planes)
     # §IV-E: a layer's batch-wide output set must stay staged until the next
     # layer consumes it; the reserved way holds inputs + outputs, so a layer
     # spills once its per-image output exceeds a quarter of the I/O way.
@@ -434,6 +493,8 @@ def plan_layer(spec: LayerSpec,
         overlap=ov,
         integrity=bool(integrity) and spec.kind in ("conv", "fc"),
         quarantined_slices=quarantined,
+        compressed=compressed,
+        dense_filter_bytes=dense_resident,
     )
 
 
@@ -455,6 +516,7 @@ class NetworkSchedule:
     batch: int
     overlap: bool = False  # §IV-E double buffering requested for the net
     integrity: bool = False  # PR 7 checksum verification requested
+    compressed: bool = False  # ISSUE 8 CSR bit-plane filter residency
 
     def plan(self, name: str) -> SlicePlan:
         for p in self.layers:
@@ -490,18 +552,49 @@ class NetworkSchedule:
         return sum(1 for p in self.layers if p.overlap)
 
     @property
+    def residency_credit_bytes(self) -> int:
+        """Filter bytes per batch that compression keeps off the load
+        (dense live-set residency minus the compressed footprint, summed
+        over layers); 0 for uncompressed schedules."""
+        return sum(p.residency_credit_bytes for p in self.layers)
+
+    @property
     def stream_batch_limit(self) -> int:
         """Images the reserved I/O way can stage at once for the widest
         layer (inputs + outputs share the way) — the §VI-C streaming
-        bound; batches beyond it spill (see ``spill_to_dram``).  By
-        construction independent of pruning: activations stream at full
-        width whether or not filters are zero (asserted by
-        tests/test_sparsity.py — a fully pruned network streams no deeper
-        than a dense one).  This is also the hard admission cap of the
-        SLO serving policy (core/slo.py): admitted batches never exceed
-        it."""
-        widest = max(p.input_bytes_per_image + p.output_bytes_per_image
-                     for p in self.layers)
+        bound; batches beyond it spill (see ``spill_to_dram``).  For
+        uncompressed plans this is by construction independent of pruning:
+        activations stream at full width whether or not filters are zero
+        (asserted by tests/test_sparsity.py — a fully pruned network
+        streams no deeper than a dense one).
+
+        Compressed plans (ISSUE 8) may additionally adopt the tighter
+        per-layer staging accounting the compressed pipeline enables: a
+        spilling layer's outputs round-trip DRAM (already priced per image
+        via ``spill_bytes_per_image``) rather than staying staged, so they
+        stop occupying the way, and the per-pass compressed filter chunk
+        (``filter_bytes_per_pass``, the §IV-E streaming unit) is staged
+        alongside the activations instead.  The runtime picks, PER LAYER,
+        whichever discipline is narrower — legacy streaming is always
+        still available — so compression never LOWERS the ceiling, and
+        raises it where staged outputs (not filters) were the bottleneck
+        (the full-network stem, today's limit-1 layers, goes 1 -> 2 at
+        50% pruning; benchmarks/sched_breakdown.py gates this).
+        Shrinking residency shrinks the packed width, so the limit is
+        monotone non-decreasing in pruning (asserted by the
+        tests/test_sparsity.py property sweep).  This is also the hard
+        admission cap of the SLO serving policy (core/slo.py): admitted
+        batches never exceed it."""
+        def _width(p: SlicePlan) -> int:
+            legacy = p.input_bytes_per_image + p.output_bytes_per_image
+            if not self.compressed:
+                return legacy
+            packed = (p.input_bytes_per_image
+                      + (0 if p.spill_to_dram else p.output_bytes_per_image)
+                      + p.filter_bytes_per_pass)
+            return min(legacy, packed)
+
+        widest = max(_width(p) for p in self.layers)
         return max(1, self.geom.io_way_bytes // widest)
 
 
@@ -512,20 +605,25 @@ def plan_network(specs: Sequence[LayerSpec] | Iterable[LayerSpec],
                  overlap: bool = False,
                  integrity: bool = False,
                  quarantined_slices: Sequence[int] = (),
+                 compressed: bool = False,
                  ) -> NetworkSchedule:
     """Plan a network.  ``occupancy`` maps layer names to their
     :class:`LayerOccupancy` (layers absent from the map plan dense);
     ``overlap`` requests §IV-E double buffering for every layer (granted
     per layer by :func:`plan_layer`'s legality rule); ``integrity``
-    requests PR 7 checksum verification for every compute layer, and
+    requests PR 7 checksum verification for every compute layer;
     ``quarantined_slices`` re-serializes every layer over the surviving
-    slice pool."""
+    slice pool, and ``compressed`` stores every compute layer's filters
+    CSR-style per bit plane (ISSUE 8 — residency, streaming and the
+    batch ceiling all shrink/raise together)."""
     occupancy = occupancy or {}
     return NetworkSchedule(
         tuple(plan_layer(s, geom, batch, occupancy=occupancy.get(s.name),
                          overlap=overlap, integrity=integrity,
-                         quarantined_slices=quarantined_slices)
-              for s in specs), geom, batch, overlap, bool(integrity))
+                         quarantined_slices=quarantined_slices,
+                         compressed=compressed)
+              for s in specs), geom, batch, overlap, bool(integrity),
+        bool(compressed))
 
 
 def prune_occupancy(specs: Iterable[LayerSpec], fraction: float = 0.5,

@@ -143,6 +143,13 @@ class LayerResult:
     # Kept OUT of mac_s/reduce_s so the §IV-E hidden-load credit (capped by
     # mac+reduce) is untouched and the additive-credit invariant is exact.
     integrity_s: float = 0.0
+    # ISSUE 8 compressed residency: the filter-load seconds compression
+    # keeps off the §VI-C per-batch load — (dense live-set bytes −
+    # compressed bytes) / filter_bw, already inside filter_s because the
+    # plan's filter_bytes IS the compressed footprint.  An exact additive
+    # credit: dense total_s − compressed total_s == residency_credit_s for
+    # overlap-off plans (zero when the plan is uncompressed).
+    residency_credit_s: float = 0.0
 
     @property
     def compute_s(self) -> float:
@@ -264,7 +271,9 @@ def simulate_layer(
     return LayerResult(spec, m, mac_s, reduce_s, quant_s, 0.0, filter_s,
                        input_s, output_s, per_conv, energy, plan,
                        prologue_s=prologue_s, overlap=overlap,
-                       integrity_s=integrity_s)
+                       integrity_s=integrity_s,
+                       residency_credit_s=(plan.residency_credit_bytes
+                                           / const.filter_bw))
 
 
 def modeled_layer_cycles(
@@ -323,6 +332,7 @@ def modeled_layer_cycles(
         hidden_s=res.hidden_s,
         overlapped_total_s=res.total_s - res.hidden_s,
         integrity_s=res.integrity_s,
+        residency_credit_s=res.residency_credit_s,
     )
 
 
@@ -366,6 +376,15 @@ class NetworkResult:
         """PR 7 per-pass checksum verification, summed over layers — the
         network's exact additive integrity cost (zero when off)."""
         return sum(l.integrity_s for l in self.layers)
+
+    @property
+    def residency_credit_s(self) -> float:
+        """ISSUE 8 compressed residency: filter-load seconds compression
+        keeps off the per-batch load, summed over layers.  Batch-
+        independent (filters load once per batch), so for overlap-off
+        schedules ``batch_time_s(dense, N) - batch_time_s(compressed, N)
+        == residency_credit_s`` exactly, for every N (zero when off)."""
+        return sum(l.residency_credit_s for l in self.layers)
 
     @property
     def compute_s(self) -> float:

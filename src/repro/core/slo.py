@@ -106,6 +106,16 @@ class LatencyModel:
                 self._schedule_for(batch), const=self._const)
         return self._results[batch]
 
+    def invalidate_plans(self) -> None:
+        """Drop every memoized priced result — call after the serving
+        engine re-plans (ISSUE 8 warmup re-planning replaces the schedule
+        cache behind ``schedule_for``), so predictions re-price the NEW
+        plans instead of serving a stale curve.  Calibration observations
+        are kept: the wall/modeled scale tracks host effects, not the
+        plan shape (the re-planner excludes the one batch that executed
+        the retired plan)."""
+        self._results.clear()
+
     def modeled_batch_s(self, batch: int) -> float:
         """Modeled time to run one admitted batch: filter load once +
         ``batch`` x (marginal + spill) — ``simulator.batch_time_s``."""
@@ -114,7 +124,9 @@ class LatencyModel:
     @property
     def stream_batch_limit(self) -> int:
         """The §VI-C streaming bound of the planned network (images the
-        reserved I/O way stages at once; pruning-independent)."""
+        reserved I/O way stages at once).  Pruning-independent for
+        uncompressed plans; compressed plans (ISSUE 8) may stage deeper —
+        see ``NetworkSchedule.stream_batch_limit``."""
         return self._schedule_for(1).stream_batch_limit
 
     # -- calibration ---------------------------------------------------------

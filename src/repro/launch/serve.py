@@ -253,6 +253,25 @@ class NCServingEngine(BatchQueueEngine):
     ``nc_forward``, so logits stay bit-identical to standalone runs
     whatever batch sizes the policy picks.
 
+    ``compressed=True`` (ISSUE 8) plans every batch size with CSR
+    bit-plane filter residency (``plan_network(..., compressed=True)``):
+    resident filters shrink to their live bit planes plus a per-plane
+    live-column bitmap, the modeled time earns the exact residency
+    credit, and — because a spilling layer's staged outputs stop
+    occupying the reserved I/O way — ``schedule.stream_batch_limit``
+    (the SLO policy's hard batch cap) can only rise.  Logits stay
+    byte-identical to the dense store.
+
+    ``warmup_replan=True`` (ISSUE 8) treats the first successfully served
+    batch as a measurement: its report's observed per-layer input
+    sparsity and live output bytes replace the advisory ReLU-chain
+    estimate (``inception.observed_occupancy``), every cached plan is
+    rebuilt from the measured occupancy (requant passes shrink to the
+    live output set), and the latency model drops its priced results so
+    the calibration curve never mixes estimate-planned and
+    measurement-planned predictions.  The warmup batch itself is
+    excluded from calibration; logits are byte-identical throughout.
+
     ``integrity=True`` (PR 7) plans every batch size with ABFT checksum
     verification (``plan_network(..., integrity=True)``): corruption
     under an active ``core.faults`` scope is detected and re-executed
@@ -279,6 +298,7 @@ class NCServingEngine(BatchQueueEngine):
     def __init__(self, params, config=None, *, max_batch: int = 4,
                  geom=None, engine: str | None = None, sparse: bool = True,
                  overlap: bool = True, integrity: bool = False,
+                 compressed: bool = False, warmup_replan: bool = False,
                  slo_ms: float | None = None,
                  hold_slack_ms: float | None = None, now_fn=time.monotonic):
         from repro.core import schedule as nc_schedule
@@ -303,11 +323,16 @@ class NCServingEngine(BatchQueueEngine):
                           if sparse else None)
         self.overlap = overlap
         self.integrity = integrity
+        self.compressed = compressed
+        self.warmup_replan = warmup_replan
+        self._warmup_pending = bool(warmup_replan)
+        self.warmup_replans = 0
         self.schedule = self._plan_network(self.specs, self.geom,
                                            batch=max_batch,
                                            occupancy=self.occupancy,
                                            overlap=self.overlap,
-                                           integrity=self.integrity)
+                                           integrity=self.integrity,
+                                           compressed=self.compressed)
         self._schedules = {max_batch: self.schedule}
         self._fallback_schedules: dict = {}
         self.retries = 0  # primary re-attempts that succeeded or ran
@@ -334,13 +359,31 @@ class NCServingEngine(BatchQueueEngine):
                                                     batch=n,
                                                     occupancy=self.occupancy,
                                                     overlap=self.overlap,
-                                                    integrity=self.integrity)
+                                                    integrity=self.integrity,
+                                                    compressed=self.compressed)
         return self._schedules[n]
+
+    def _replan_from_report(self, report) -> None:
+        """Warmup re-planning (ISSUE 8): replace the advisory ReLU-chain
+        occupancy estimate with what the warmup batch MEASURED —
+        ``inception.observed_occupancy`` re-scans the resident filters and
+        takes each conv's input sparsity and live output bytes from the
+        report — then drop every cached plan and the latency model's
+        priced results so subsequent batches plan, execute and are
+        predicted from the measured occupancy.  The dense/serial fallback
+        plans never depended on occupancy, so they stay."""
+        self.occupancy = self._inception.observed_occupancy(
+            self.wpack, self.config, report)
+        self._schedules.clear()
+        self.schedule = self._schedule_for(self.max_batch)
+        self.latency_model.invalidate_plans()
+        self.warmup_replans += 1
 
     def _fallback_schedule_for(self, n: int):
         """Degradation rung 2's plan: dense (no pruned passes), serial (no
-        double buffering) — the most conservative schedule the engine can
-        execute, keeping any integrity checking the deployment asked for."""
+        double buffering), uncompressed — the most conservative schedule
+        the engine can execute, keeping any integrity checking the
+        deployment asked for."""
         if n not in self._fallback_schedules:
             self._fallback_schedules[n] = self._plan_network(
                 self.specs, self.geom, batch=n, occupancy=None,
@@ -392,10 +435,21 @@ class NCServingEngine(BatchQueueEngine):
                 return True
         wall = time.perf_counter() - t0
         if degraded is None:
-            # calibrate the latency model with the measured batch wall time
-            # (retried batches fold their TRUE total wall in — the retries
-            # are real latency the next admission must predict around)
-            self.latency_model.observe(len(batch), wall)
+            if self._warmup_pending and report is not None:
+                # warmup batch: fold its MEASURED occupancy back into the
+                # planner, then EXCLUDE it from calibration — it executed
+                # (and was priced by) the retired estimate plan, and
+                # observing it against the re-planned predictions would
+                # seed the curve with a stale ratio
+                self._warmup_pending = False
+                self._replan_from_report(report)
+                self.latency_model.exclude(len(batch), wall)
+            else:
+                # calibrate the latency model with the measured batch wall
+                # time (retried batches fold their TRUE total wall in — the
+                # retries are real latency the next admission must predict
+                # around)
+                self.latency_model.observe(len(batch), wall)
         else:
             # degraded batches did not execute the plan the model prices;
             # folding their wall time in would poison later predictions
@@ -493,6 +547,9 @@ class NCServingEngine(BatchQueueEngine):
             calibration_excluded=self.latency_model.excluded,
             stream_batch_limit=self.schedule.stream_batch_limit,
             integrity=self.integrity,
+            compressed=self.compressed,
+            residency_credit_bytes=self.schedule.residency_credit_bytes,
+            warmup_replans=self.warmup_replans,
             failed=len(self.failed),
             errors=list(self.errors),
             retries=self.retries,
@@ -521,6 +578,8 @@ def _main_neural_cache(args) -> int:
     engine = NCServingEngine(params, cfg, max_batch=args.max_batch,
                              overlap=not args.no_overlap,
                              integrity=profile is not None,
+                             compressed=args.compressed,
+                             warmup_replan=args.warmup_replan,
                              slo_ms=args.slo_ms)
     rng = np.random.default_rng(0)
     for r in range(args.requests):
@@ -543,6 +602,13 @@ def _main_neural_cache(args) -> int:
           f"<= {args.max_batch}); modeled: {res.latency_s*1e3:.3f} ms/img "
           f"unbatched, {tp:.0f} inf/s at batch {args.max_batch} "
           f"(single socket)")
+    if args.compressed or args.warmup_replan:
+        s = engine.stats()
+        print(f"[serve-nc] compressed residency: "
+              f"{'on' if s['compressed'] else 'off'}, credit "
+              f"{s['residency_credit_bytes']} B/batch, stream limit "
+              f"{s['stream_batch_limit']}, warmup re-plans "
+              f"{s['warmup_replans']}")
     if args.slo_ms is not None:
         s = engine.stats()
         print(f"[serve-nc] SLO {args.slo_ms:.0f} ms: hit rate "
@@ -578,6 +644,17 @@ def main() -> int:
                     help="plan --neural-cache batches serial (no filter "
                          "streaming under MAC+reduce); default plans are "
                          "double-buffered per §IV-E headroom")
+    ap.add_argument("--compressed", action="store_true",
+                    help="plan --neural-cache batches with CSR bit-plane "
+                         "filter residency (ISSUE 8): smaller resident "
+                         "footprint, exact modeled residency credit, and "
+                         "a raised streaming batch ceiling; logits stay "
+                         "byte-identical")
+    ap.add_argument("--warmup-replan", action="store_true",
+                    help="treat the first served --neural-cache batch as "
+                         "a measurement: re-plan all batch sizes from its "
+                         "observed per-layer sparsity and live outputs "
+                         "instead of the ReLU-chain estimate")
     ap.add_argument("--slo-ms", type=float, default=None,
                     help="per-request latency SLO for --neural-cache: "
                          "batches are sized by the predicted p99 from the "

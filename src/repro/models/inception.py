@@ -407,6 +407,8 @@ class NCLayerReport:
     reexec_passes: int = 0  # fault-triggered pass re-executions
     faults_detected: int = 0  # verification mismatches caught
     quarantined_slices: tuple = ()  # slices retired by stuck-at recovery
+    live_output_bytes: int = 0  # MEASURED max per-image non-zero-point
+    # output bytes (conv only) — the warmup re-planner's observed occupancy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -554,6 +556,36 @@ def network_occupancy(wpack: dict, config: InceptionConfig = REDUCED) -> dict:
     return occ
 
 
+def observed_occupancy(wpack: dict, config: InceptionConfig,
+                       report: "NCForwardReport") -> dict:
+    """Measured per-layer occupancy from a completed forward pass (ISSUE 8
+    warmup re-planning): the filter side re-runs the deterministic
+    pack-time scan exactly like :func:`network_occupancy`, but the
+    activation side is OBSERVED, not estimated — each conv's input
+    sparsity comes from the engine's zero-operand lane counts and its
+    ``live_outputs`` from the measured non-zero-point output bytes, so the
+    §IV-D requant pass count shrinks to what the warmup batch actually
+    produced.  The ReLU-chain estimate remains the prior for any layer the
+    report did not cover."""
+    est = activation_sparsity_estimates(config)
+    by_name = {l.name: l for l in report.layers}
+    occ = {}
+    for name, r, s, c, m in _iter_convs(config):
+        wq, w_qp, _ = wpack[name]
+        rows = np.asarray(wq, np.int64).reshape(r * s * c, m).T
+        rep = by_name.get(name)
+        act = est.get(name, 0.0)
+        live_out = None
+        if rep is not None and rep.kind == "conv":
+            if rep.lanes:
+                act = rep.zero_operand_lanes / rep.lanes
+            live_out = int(rep.live_output_bytes)
+        base = sched.LayerOccupancy.from_filter_rows(
+            rows, w_qp.bits, int(w_qp.zero_point), activation_sparsity=act)
+        occ[name] = dataclasses.replace(base, live_outputs=live_out)
+    return occ
+
+
 def prune_wpack(wpack: dict, fraction: float = 0.5) -> dict:
     """Fixed filter pruning for the dense-vs-sparse gates: zero out (set to
     the quantized zero point) the LAST ``round(M * fraction)`` filters of
@@ -609,6 +641,12 @@ def _nc_run_conv(name, actq, act_qps, op, wpack, spec, plan, geom, const,
                                int(qp.zero_point))
         out_qps.append(qp)
     cycles += B * plan.quant_passes * _REQUANT_PASS_CYCLES
+    # measured output occupancy for warmup re-planning: a lane holding the
+    # image's zero point is an exact zero activation, so the max over the
+    # batch of live (non-zero-point) output bytes is what the §IV-D
+    # requant passes must actually cover
+    live_out = max(int((yq[b] != int(out_qps[b].zero_point)).sum())
+                   for b in range(B))
     # quarantine re-plans mid-layer: price the plan the engine actually
     # executed, plus the exact per-pass price of each fault re-execution
     eff_plan = stats.plan if stats.plan is not None else plan
@@ -625,7 +663,8 @@ def _nc_run_conv(name, actq, act_qps, op, wpack, spec, plan, geom, const,
         zero_filters=stats.zero_filters, overlap=stats.overlap,
         integrity=stats.integrity, reexec_passes=stats.reexec_passes,
         faults_detected=stats.faults_detected,
-        quarantined_slices=stats.quarantined_slices))
+        quarantined_slices=stats.quarantined_slices,
+        live_output_bytes=live_out))
     return yq, out_qps
 
 
@@ -783,6 +822,7 @@ def _merge_chunk_records(per_chunk: list[list[NCLayerReport]],
             faults_detected=sum(r.faults_detected for r in recs),
             quarantined_slices=tuple(sorted(
                 {s for r in recs for s in r.quarantined_slices})),
+            live_output_bytes=max(r.live_output_bytes for r in recs),
         ))
     return merged
 
@@ -797,6 +837,7 @@ def nc_forward(params: dict, x: jax.Array,
                sparse: bool = False,
                overlap: bool = False,
                integrity: bool = False,
+               compressed: bool = False,
                stream_chunk: int | None = None):
     """Quantized Inception forward pass through the bit-serial emulation.
 
@@ -846,6 +887,17 @@ def nc_forward(params: dict, x: jax.Array,
     explicit ``schedule`` (build that with ``plan_network(...,
     integrity=True)`` instead).
 
+    ``compressed=True`` plans CSR bit-plane filter residency (ISSUE 8):
+    every conv/fc layer's resident footprint shrinks to the live bit
+    planes plus a per-plane live-column bitmap
+    (``mapper.compressed_filter_bytes``), the engine stores and streams
+    filters through :class:`~repro.core.bitserial.CompressedPlanes`, and
+    the modeled time earns the exact residency credit (dense minus
+    compressed at filter bandwidth).  Logits stay BYTE-IDENTICAL to the
+    dense store — decompression scatters live columns into zero words,
+    the multiply identity.  Like the other plan flags it raises when
+    combined with an explicit ``schedule``.
+
     ``stream_chunk=N`` additionally streams the batch through the network
     in chunks of ``N`` images advanced in a skewed wavefront — layer L of
     chunk i computes while chunk i+1 runs layer L-1 (cross-layer §VI-C
@@ -877,6 +929,10 @@ def nc_forward(params: dict, x: jax.Array,
         raise ValueError("request integrity through the schedule "
                          "(plan_network(..., integrity=True)); integrity= "
                          "with an explicit schedule is ambiguous")
+    if schedule is not None and compressed:
+        raise ValueError("request compression through the schedule "
+                         "(plan_network(..., compressed=True)); compressed= "
+                         "with an explicit schedule is ambiguous")
     if schedule is not None and stream_chunk is not None:
         raise ValueError("stream_chunk replans per chunk; it cannot honor "
                          "an explicit whole-batch schedule")
@@ -893,7 +949,8 @@ def nc_forward(params: dict, x: jax.Array,
         for xc in chunks:
             sc = sched.plan_network(specs_list, geom, batch=xc.shape[0],
                                     occupancy=occ, overlap=overlap,
-                                    integrity=integrity)
+                                    integrity=integrity,
+                                    compressed=compressed)
             recs: list[NCLayerReport] = []
             st = {"concat_requant_cycles": 0}
             per_records.append(recs)
@@ -923,7 +980,8 @@ def nc_forward(params: dict, x: jax.Array,
     if schedule is None:
         schedule = sched.plan_network(specs_list, geom, batch=B,
                                       occupancy=occ, overlap=overlap,
-                                      integrity=integrity)
+                                      integrity=integrity,
+                                      compressed=compressed)
     plans = {p.spec.name: p for p in schedule.layers}
     records: list[NCLayerReport] = []
     state = {"concat_requant_cycles": 0}

@@ -449,3 +449,235 @@ def test_nc_serving_engine_sparse_bit_exact():
     # every batch report saw the pruned filters skipped by the engine
     for rep in eng.reports:
         assert sum(l.zero_filters for l in rep.layers) > 0
+
+
+# ---------------------------------------------------------------------------
+# Compressed filter residency (ISSUE 8): CSR bit-plane store + plan flag
+# ---------------------------------------------------------------------------
+@given(
+    frac=st.sampled_from((0.0, 0.25, 0.5, 0.75, 1.0)),
+    tail=st.sampled_from([(1,), (1, 3), (2,)]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=10, deadline=None)
+def test_compressed_planes_roundtrip(frac, tail, seed):
+    """CompressedPlanes pack/unpack is byte-identical to the dense grid,
+    whole and per column range, and the footprint shrinks with pruning."""
+    rng = np.random.default_rng(seed)
+    n, M = 8, 12
+    grid = rng.integers(0, 2**32, size=(n, M) + tail, dtype=np.uint32)
+    k = int(round(M * frac))
+    if k:
+        grid[:, rng.choice(M, size=k, replace=False)] = 0
+    cp = bs.CompressedPlanes.compress(grid)
+    np.testing.assert_array_equal(cp.dense(), grid)
+    for m0, m1 in ((0, M), (0, 1), (3, 7), (M - 1, M), (5, 5)):
+        np.testing.assert_array_equal(cp.dense_columns(m0, m1),
+                                      grid[:, m0:m1])
+    assert cp.n_columns == M and cp.tail_shape == tuple(tail)
+    assert cp.payload_bytes + cp.index_bytes == cp.nbytes
+    if frac >= 0.5:
+        assert cp.nbytes < grid.nbytes
+    if frac == 1.0:
+        assert cp.payload_bytes == 0 and cp.live_planes == 0
+
+
+@given(
+    frac=st.sampled_from((0.0, 0.25, 0.5, 0.75, 1.0)),
+    stride=st.sampled_from([1, 2]),
+    padding=st.sampled_from(["VALID", "SAME"]),
+    batch=st.sampled_from([1, 4]),
+    tile_pixels=st.sampled_from([None, 7]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=10, deadline=None)
+def test_compressed_conv_bit_exact_vs_dense(frac, stride, padding, batch,
+                                            tile_pixels, seed):
+    """The differential harness, compressed: executing from the CSR
+    bit-plane store must be byte-identical to the dense store at every
+    pruning level, across padding/stride/batch/tiling."""
+    rng = np.random.default_rng(seed)
+    wq, w_qp, _ = _pruned_case(rng, frac=frac)
+    shape = (batch, 8, 8, 3) if batch > 1 else (8, 8, 3)
+    x = rng.normal(size=shape).astype(np.float32)
+    x_qp = q.choose_qparams(jnp.float32(x.min()), jnp.float32(x.max()))
+    qps = [x_qp] * batch if batch > 1 else x_qp
+    dense, cyc_d = nc.nc_conv2d(x, wq, qps, w_qp, stride, padding=padding,
+                                tile_pixels=tile_pixels)
+    comp, cyc_c, stats = nc.nc_conv2d(
+        x, wq, qps, w_qp, stride, padding=padding, tile_pixels=tile_pixels,
+        occupancy="detect", compressed=True, return_stats=True)
+    np.testing.assert_array_equal(np.asarray(comp), np.asarray(dense))
+    assert stats.compressed
+    if frac < 1.0:
+        assert stats.csr_payload_bytes > 0
+
+
+def test_compressed_fc_bit_exact_vs_dense():
+    rng = np.random.default_rng(7)
+    M, zp, k = 8, 3, 23
+    wq = rng.integers(0, 256, size=(k, M)).astype(np.uint8)
+    wq[:, [1, 4]] = zp
+    w_qp = q.QuantParams(scale=np.float32(0.1), zero_point=zp)
+    x = rng.normal(size=(4, k)).astype(np.float32)
+    x_qp = q.choose_qparams(jnp.float32(x.min()), jnp.float32(x.max()))
+    dense, _ = nc.nc_fc(x, wq, [x_qp] * 4, w_qp)
+    comp, _, stats = nc.nc_fc(x, wq, [x_qp] * 4, w_qp, occupancy="detect",
+                              compressed=True, return_stats=True)
+    np.testing.assert_array_equal(np.asarray(comp), np.asarray(dense))
+    assert stats.compressed
+
+
+def test_compressed_with_explicit_plan_raises():
+    spec = _spec(M=8, E=4, C=4)
+    plan = sched.plan_layer(spec, GEOM)
+    rng = np.random.default_rng(0)
+    wq, w_qp, _ = _pruned_case(rng, M=8, C=4, frac=0.0)
+    x = rng.normal(size=(4, 4, 4)).astype(np.float32)
+    x_qp = q.choose_qparams(jnp.float32(x.min()), jnp.float32(x.max()))
+    with pytest.raises(ValueError, match="ambiguous"):
+        nc.nc_conv2d(x, wq, x_qp, w_qp, layer_spec=spec, plan=plan,
+                     compressed=True)
+
+
+def test_compression_off_plan_equal_and_carryover(reduced_specs):
+    """compressed=False is the PR 7 plan, field for field; a compressed
+    plan round-trips its flag through schedules and carries the exact
+    residency bookkeeping."""
+    base = sched.plan_network(reduced_specs, GEOM, batch=4)
+    off = sched.plan_network(reduced_specs, GEOM, batch=4, compressed=False)
+    assert base == off
+    comp = sched.plan_network(reduced_specs, GEOM, batch=4, compressed=True)
+    assert comp.compressed
+    for pb, pc in zip(base.layers, comp.layers):
+        if pc.spec.kind in ("conv", "fc") and pb.filter_bytes:
+            assert pc.compressed
+            assert pc.dense_filter_bytes == pb.filter_bytes
+            assert pc.residency_credit_bytes == \
+                pb.filter_bytes - pc.filter_bytes
+        else:
+            assert pc.residency_credit_bytes == 0
+
+
+def test_residency_credit_exact_per_layer_and_batch(reduced_specs):
+    """Acceptance: dense minus compressed modeled time equals the
+    residency credit to 1e-12, per layer and per batch (overlap-off plans
+    — overlap re-times hidden loads and is gated separately)."""
+    from repro.core.simulator import batch_time_s
+
+    for occ in (None, sched.prune_occupancy(reduced_specs, 0.5)):
+        dense = sched.plan_network(reduced_specs, GEOM, batch=4,
+                                   occupancy=occ)
+        comp = sched.plan_network(reduced_specs, GEOM, batch=4,
+                                  occupancy=occ, compressed=True)
+        rd, rc = simulate_network(dense), simulate_network(comp)
+        for ld, lc in zip(rd.layers, rc.layers):
+            assert abs((ld.total_s - lc.total_s)
+                       - lc.residency_credit_s) < 1e-12
+        for n in (1, 2, 4, 8, 16):
+            assert abs((batch_time_s(rd, n) - batch_time_s(rc, n))
+                       - rc.residency_credit_s) < 1e-12
+        assert abs(rc.residency_credit_s
+                   - comp.residency_credit_bytes / 10.96e9) < 1e-12
+
+
+def test_stream_limit_and_spill_monotone_under_compression(reduced_specs):
+    """Property sweep (ISSUE 8 satellite): as residency shrinks (pruning
+    0 -> 100%, compressed on/off), ``stream_batch_limit`` is monotone
+    non-decreasing, never below the uncompressed plan's, and spill
+    decisions never move (outputs are pruning- and compression-blind)."""
+    fracs = (0.0, 0.25, 0.5, 0.75, 1.0)
+    for geom in (GEOM, GEOM_1SLICE):
+        dense = sched.plan_network(reduced_specs, geom, batch=4)
+        spills = [p.spill_to_dram for p in dense.layers]
+        prev = {True: 0, False: 0}
+        for frac in fracs:
+            occ = sched.prune_occupancy(reduced_specs, frac)
+            for compressed in (False, True):
+                s = sched.plan_network(reduced_specs, geom, batch=4,
+                                       occupancy=occ, compressed=compressed)
+                assert [p.spill_to_dram for p in s.layers] == spills
+                assert s.stream_batch_limit >= dense.stream_batch_limit
+                assert s.stream_batch_limit >= prev[compressed], \
+                    (geom.name, frac, compressed)
+                prev[compressed] = s.stream_batch_limit
+                if not compressed:  # uncompressed: pinned exactly
+                    assert s.stream_batch_limit == dense.stream_batch_limit
+
+
+def test_compressed_residency_ratio_at_half_pruning(reduced_specs):
+    """50% filter pruning + compression keeps no more than 0.55x the dense
+    filter bytes resident (the kernel_bench gate's modeled side)."""
+    occ = sched.prune_occupancy(reduced_specs, 0.5)
+    dense = sched.plan_network(reduced_specs, GEOM, batch=4)
+    comp = sched.plan_network(reduced_specs, GEOM, batch=4, occupancy=occ,
+                              compressed=True)
+    assert comp.filter_bytes_loaded <= 0.55 * dense.filter_bytes_loaded
+
+
+@pytest.mark.slow
+def test_nc_serving_engine_compressed_ragged_bit_exact():
+    """Compressed serving with a ragged tail (3 requests, max_batch=2):
+    every request's logits byte-identical to the dense standalone
+    forward, and the engine's schedules all carry the compressed flag."""
+    from repro.launch.serve import NCRequest, NCServingEngine
+
+    cfg = inception.reduced_config(img=47, width_div=8, classes=8,
+                                   stages=("a",))
+    params = inception.init_params(jax.random.PRNGKey(0), config=cfg)
+    eng = NCServingEngine(params, cfg, max_batch=2, compressed=True)
+    assert eng.schedule.compressed
+    rng = np.random.default_rng(0)
+    imgs = rng.random((3, 47, 47, 3)).astype(np.float32)
+    for r in range(3):
+        eng.submit(NCRequest(rid=r, image=imgs[r]))
+    done = eng.run()
+    assert len(done) == 3 and not eng.failed
+    assert sorted(eng._schedules) == [1, 2]  # ragged tail planned its own
+    assert all(s.compressed for s in eng._schedules.values())
+    for r in done:
+        ref, _ = inception.nc_forward(params, imgs[r.rid], config=cfg)
+        np.testing.assert_array_equal(r.logits, np.asarray(ref))
+    assert eng.stats()["residency_credit_bytes"] == \
+        eng.schedule.residency_credit_bytes
+
+
+@pytest.mark.slow
+def test_warmup_replan_shrinks_quant_passes_logits_unchanged():
+    """Warmup re-planning on a synthetically sparse model (first conv
+    biased so far negative its post-ReLU outputs are all zero): the
+    re-planned quant passes drop below the estimate-planned count, logits
+    stay byte-identical, and the calibration curve excludes exactly the
+    warmup batch."""
+    from repro.launch.serve import NCRequest, NCServingEngine
+
+    cfg = inception.reduced_config(img=47, width_div=8, classes=8,
+                                   stages=("a",))
+    params = inception.init_params(jax.random.PRNGKey(0), config=cfg)
+    first = cfg.stem[0][0]
+    params[first]["bias"] = jnp.full_like(params[first]["bias"], -100.0)
+
+    eng = NCServingEngine(params, cfg, max_batch=2, compressed=True,
+                          warmup_replan=True)
+    est_quant = sum(p.quant_passes for p in eng.schedule.layers)
+    rng = np.random.default_rng(3)
+    imgs = rng.random((4, 47, 47, 3)).astype(np.float32)
+    for r in range(4):
+        eng.submit(NCRequest(rid=r, image=imgs[r]))
+    done = eng.run()
+    assert len(done) == 4 and not eng.failed
+    s = eng.stats()
+    assert s["warmup_replans"] == 1
+    # measured: the dead conv's outputs requantize to the known zero
+    # point, so its §IV-D passes vanish from the re-planned schedule
+    obs_quant = sum(p.quant_passes for p in eng.schedule.layers)
+    assert obs_quant < est_quant, (obs_quant, est_quant)
+    assert eng.occupancy[first].live_outputs == 0
+    # calibration honest across the re-plan: the warmup batch (executed
+    # under the retired estimate plan) is excluded, the rest observed
+    assert s["calibration_excluded"] == 1
+    assert s["calibration_samples"] == eng.steps - 1
+    # logits byte-identical to the estimate-planned standalone forward
+    ld, _ = inception.nc_forward(params, imgs, config=cfg)
+    got = np.stack([r.logits for r in sorted(done, key=lambda r: r.rid)])
+    np.testing.assert_array_equal(got, np.asarray(ld))
