@@ -350,7 +350,7 @@ def _overlap_rows():
 
 
 def _compressed_rows():
-    """Compressed-vs-dense record pair (ISSUE 8): reduced_config at batch
+    """Compressed-vs-dense record pair (PR 8): reduced_config at batch
     4 with the fixed 50% filter pruning, executed from the dense filter
     store (every filter runs) and from the CSR bit-plane store through
     the compressed sparse schedule.  GATES, any failure raises like the
@@ -422,7 +422,7 @@ def _compressed_rows():
 
 
 def _compressed_smoke_rows():
-    """``--quick`` compressed smoke (ISSUE 8): a small half-pruned conv
+    """``--quick`` compressed smoke (PR 8): a small half-pruned conv
     executed from the CSR bit-plane store — GATE: byte-identical to the
     dense store.  Subsecond, registers a retimer like the kernel rows."""
     from repro.core import nc_layers as nc

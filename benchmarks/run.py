@@ -11,9 +11,10 @@ the known ``kernel/f32_dot`` flap) and, if the slowdown survives, flagged
 on stderr and listed under ``notes.regressions`` in the refreshed file,
 so a later PR's run makes its own slowdowns visible.
 
-``--quick`` runs only the subsecond ``kernel/*`` subset through the same
-diff-vs-baseline gate (no baseline rewrite, no slow-test gate) — a CI
-pre-check; ``tests/test_bench_quick.py`` keeps it working.  ``--only
+``--quick`` runs only the subsecond subset — the ``kernel/*`` rows plus
+the ``replay/quick_poisson`` traffic-replay smoke (PR 9) — through the
+same diff-vs-baseline gate (no baseline rewrite, no slow-test gate) — a
+CI pre-check; ``tests/test_bench_quick.py`` keeps it working.  ``--only
 <record-prefix>`` narrows further: just the matching retimer-backed
 records, median of 3, diffed against the baseline.  The gate output and
 the refreshed baseline both carry a host fingerprint (cpu count,
@@ -44,6 +45,7 @@ MODULES = [
     "benchmarks.tab4_cache_scaling",
     "benchmarks.kernel_bench",
     "benchmarks.lm_neural_cache",
+    "benchmarks.traffic_replay",
 ]
 
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_kernels.json"
@@ -72,7 +74,7 @@ SPEEDUP_NOTES = {
                 "kernel_bench RAISES if sparse wall time exceeds dense; "
                 "full-network modeled credit at 50% pruning is ~48% of "
                 "compute cycles (sparsity/TOTAL row of sched_breakdown)",
-    "compression": "ISSUE 8: compressed-vs-dense pair "
+    "compression": "PR 8: compressed-vs-dense pair "
                    "(emulation/nc_forward_b4_pruned50_densestore/_csr): "
                    "CSR bit-plane filter residency at 50% pruning keeps "
                    "<= 0.55x the dense filter bytes resident (gated), "
@@ -90,11 +92,19 @@ SPEEDUP_NOTES = {
     "emulation_suite_now_s": 2.5,      # same module, packed engine (PR 1)
     "emulation_speedup_vs_seed": 5.8,  # wall; per-op bodies are >20x
     "nc_conv2d_pr1_us": 168421.96,     # 14x14x8 * 3x3x8x16 @ PR 1 baseline
+    "orchestrator": "PR 9: replay/* rows are fully seeded fake-clock "
+                    "replays (traces + jitter), so their recorded mean "
+                    "latencies are deterministic — a notes.regressions "
+                    "entry there is a routing/admission behavior change, "
+                    "never host noise; traffic_replay RAISES unless the "
+                    "latency router beats round-robin on SLO hit rate on "
+                    "both traces and completed logits stay byte-identical "
+                    "to standalone nc_forward on the real-fleet segment",
 }
 
 
 def host_fingerprint() -> dict:
-    """Provenance for the recorded wall times (ISSUE 8): which host shape
+    """Provenance for the recorded wall times (PR 8): which host shape
     produced them.  Written under ``notes.host`` in BENCH_kernels.json and
     printed next to the regression gate, so a flagged slowdown can be told
     apart from a container change (cpu_count 1 vs N decides whether the
@@ -178,20 +188,30 @@ def harden_regressions(regressions: list[dict], records: list[dict],
     return confirmed
 
 
-def _dump_kernel_records() -> None:
+def _dump_kernel_records(ok: set | None = None) -> None:
     try:
         from benchmarks import kernel_bench
-        records = kernel_bench.RECORDS
+        records = list(kernel_bench.RECORDS)
+        retimers = dict(kernel_bench.RETIMERS)
     except Exception:  # pragma: no cover - harness robustness
         return
     if not records:
         return
+    # fold in the traffic-replay records (PR 9) only when that module ran
+    # to completion — partial records must not masquerade as a baseline
+    if ok is None or "benchmarks.traffic_replay" in ok:
+        try:
+            from benchmarks import traffic_replay
+            records += traffic_replay.RECORDS
+            retimers.update(traffic_replay.RETIMERS)
+        except Exception:  # pragma: no cover - harness robustness
+            pass
     try:
         previous = json.loads(BENCH_JSON.read_text())
     except Exception:
         previous = None
     regressions = harden_regressions(diff_records(previous, records),
-                                     records, kernel_bench.RETIMERS)
+                                     records, retimers)
     for reg in regressions:
         print(f"# PERF REGRESSION {reg['op']}: {reg['before_us']:.1f} us -> "
               f"{reg['after_us']:.1f} us ({reg['ratio']}x)", file=sys.stderr)
@@ -223,27 +243,32 @@ def _run_quick() -> int:
     regression gate as a full run.  Never rewrites the baseline (a partial
     record set must not masquerade as one) and skips the slow-test gate —
     a CI pre-check that finishes in seconds."""
-    from benchmarks import kernel_bench
+    from benchmarks import kernel_bench, traffic_replay
     print("name,us_per_call,derived")
     try:
         for line in kernel_bench.run_quick():
             print(line)
+        # PR 9: the sub-second traffic-replay smoke rides along — it gates
+        # the router-beats-round-robin claim and the accounting identities
+        for line in traffic_replay.run_quick():
+            print(line)
     except Exception:  # pragma: no cover - harness robustness
         traceback.print_exc(file=sys.stderr)
         return 1
+    records = kernel_bench.RECORDS + traffic_replay.RECORDS
+    retimers = dict(kernel_bench.RETIMERS, **traffic_replay.RETIMERS)
     try:
         previous = json.loads(BENCH_JSON.read_text())
     except Exception:
         previous = None
     regressions = harden_regressions(
-        diff_records(previous, kernel_bench.RECORDS),
-        kernel_bench.RECORDS, kernel_bench.RETIMERS)
+        diff_records(previous, records), records, retimers)
     for reg in regressions:
         print(f"# PERF REGRESSION {reg['op']}: {reg['before_us']:.1f} us -> "
               f"{reg['after_us']:.1f} us ({reg['ratio']}x)", file=sys.stderr)
     print(f"# host: {json.dumps(host_fingerprint(), sort_keys=True)}",
           file=sys.stderr)
-    print(f"# quick mode: {len(kernel_bench.RECORDS)} kernel records "
+    print(f"# quick mode: {len(records)} records "
           f"diffed, {len(regressions)} regressions; baseline not "
           f"rewritten", file=sys.stderr)
     return 0
@@ -259,21 +284,23 @@ def _run_only(prefix: str) -> int:
     must not masquerade as one)."""
     import statistics
 
-    from benchmarks import kernel_bench
+    from benchmarks import kernel_bench, traffic_replay
     from benchmarks.common import row
     try:
         # building the quick rows registers the retimers (and runs their
         # correctness gates); their first-pass timings are discarded —
         # only the fresh medians below are reported
         kernel_bench.run_quick()
+        traffic_replay.run_quick()
     except Exception:  # pragma: no cover - harness robustness
         traceback.print_exc(file=sys.stderr)
         return 1
-    matching = {op: rt for op, rt in kernel_bench.RETIMERS.items()
+    retimers = dict(kernel_bench.RETIMERS, **traffic_replay.RETIMERS)
+    matching = {op: rt for op, rt in retimers.items()
                 if op.startswith(prefix)}
     if not matching:
         print(f"# --only {prefix!r} matches no retimer-backed record; "
-              f"available: {', '.join(sorted(kernel_bench.RETIMERS))}",
+              f"available: {', '.join(sorted(retimers))}",
               file=sys.stderr)
         return 1
     try:
@@ -345,7 +372,7 @@ def main() -> None:
     # only persist a baseline from a complete kernel_bench run — a partial
     # RECORDS list would masquerade as a full perf baseline
     if "benchmarks.kernel_bench" in ok:
-        _dump_kernel_records()
+        _dump_kernel_records(ok)
     if not _run_slow_gate():
         print("# slow-test gate FAILED", file=sys.stderr)
         failures += 1

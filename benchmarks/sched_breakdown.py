@@ -5,7 +5,7 @@ scheduler (fixed 50% filter pruning of the full paper network), plus the
 SLO admission curve: predicted latency-vs-batch from the cycle model
 (core/slo.py) next to the throughput curve, and the batch the admission
 policy would pick per SLO budget, plus the overlap-on/off per-block table
-(the ISSUE 6 double-buffered pipeline's hidden-latency credit, gated both
+(the PR 6 double-buffered pipeline's hidden-latency credit, gated both
 modeled — per-layer overlapped <= serial — and measured, against the
 serial/overlapped record pair in ``BENCH_kernels.json``).
 
@@ -18,7 +18,7 @@ plateau off the paper's 604 inf/s by >10%, a sparse layer whose modeled
 cycles do not drop by the skipped-pass credit exactly, a predicted latency
 curve that is not strictly increasing in the batch, or an SLO-chosen batch
 past ``stream_batch_limit``), making it a perf-model gate, not just a
-printer.  The compressed-residency section (ISSUE 8) gates the CSR
+printer.  The compressed-residency section (PR 8) gates the CSR
 bit-plane filter store on the full paper network: per-layer residency
 credit exactness, ``stream_batch_limit`` strictly raised over the dense
 plan (1 -> 2 at 50% pruning — every limit-1 stem bottleneck must stage
@@ -182,7 +182,7 @@ def run() -> list[str]:
 
 
 def _compression_rows(specs) -> list[str]:
-    """Compressed-residency table on the FULL paper network (ISSUE 8),
+    """Compressed-residency table on the FULL paper network (PR 8),
     fixed 50% pruning at batch 64.  Gates:
 
     * per-layer exactness — sparse minus compressed modeled time must
@@ -279,7 +279,7 @@ def _overlap_rows(specs, rs) -> list[str]:
     """Overlap-on/off per-block table: the hidden-latency credit of the
     double-buffered plan on the FULL paper network at batch 64.
 
-    Gates (the ISSUE 6 acceptance criteria):
+    Gates (the PR 6 acceptance criteria):
 
     * every layer's overlapped modeled time (``total_s - hidden_s``) must
       be <= its serial time — overlap re-prices the filter load, never the

@@ -1,0 +1,299 @@
+"""Traffic replay: the multi-engine orchestrator under 10^5+ requests.
+
+The paper's throughput story scales by adding sockets (§VI-C/VI-D); this
+bench replays seeded arrival traces — Poisson and bursty — through a
+heterogeneous three-socket fleet behind ``launch/orchestrator.py`` and
+GATES the routing claim: the latency-model router ("latency") must beat
+the latency-blind baseline ("round-robin") on SLO hit rate, on BOTH
+traces, or this module RAISES.
+
+Fleet (``engine_api.SimulatedEngine`` over compressed full-Inception
+plans — real ``LatencyModel``/``AdmissionPolicy`` code paths, fake-clock
+execution):
+
+=============  ======================  ==========  ====================
+socket         geometry                true_scale  modeled s/img (b=1)
+=============  ======================  ==========  ====================
+socket-35MB    XEON_E5_35MB (14 sl)    1.00        ~0.0047 (cap 2)
+socket-17MB    scaled(7)               1.25        ~0.0070 (cap 1)
+socket-10MB    scaled(4)               1.60        ~0.0104 (cap 1)
+=============  ======================  ==========  ====================
+
+The 10 MB socket cannot meet the 12 ms deadline even unloaded (p99 ~21 ms
+once calibrated) — round-robin still sends it a third of the singles;
+the latency router prices it out and only uses it as a deadline-blown
+floor.  Every quantity is seeded (traces, per-engine jitter), so the
+recorded mean latencies are deterministic and the BENCH_kernels.json
+regression gate flags *routing* regressions, not host noise.
+
+A second, real-execution segment routes a handful of images through
+three real ``NCServingEngine`` sockets (tiny stem config) on the same
+orchestrator and RAISES unless every completed request's logits are
+byte-identical to a standalone ``nc_forward`` — the router changes
+placement, never results.
+
+``run_quick()`` replays a short Poisson trace through both routers in
+under a second (the ``--quick`` smoke in benchmarks/run.py).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row
+
+RECORDS: list[dict] = []
+RETIMERS: dict[str, object] = {}
+
+SLO_MS = 12.0
+POISSON_RATE_HZ = 180.0
+BURSTY_RATE_HZ = 120.0
+JITTER = 0.05
+
+# fleet: (name, slice scale of XEON_E5_35MB, true wall / modeled time)
+FLEET_SPEC = [
+    ("socket-35MB", 14, 1.00),
+    ("socket-17MB", 7, 1.25),
+    ("socket-10MB", 4, 1.60),
+]
+
+
+def _rec(name: str, us: float, shape: str, derived: str = "") -> str:
+    RECORDS.append({"op": name, "shape": shape, "us_per_call": round(us, 2),
+                    "derived": derived})
+    return row(name, us, derived or shape)
+
+
+def make_fleet(jitter: float = JITTER):
+    """Three heterogeneous simulated sockets over compressed plans."""
+    from repro.core import schedule as nc_schedule
+    from repro.core.cache_geometry import XEON_E5_35MB
+    from repro.launch.engine_api import SimulatedEngine
+    from repro.models import inception
+
+    specs = inception.inception_v3_specs()
+
+    def schedule_for(geom):
+        cache: dict = {}
+
+        def f(n):
+            if n not in cache:
+                cache[n] = nc_schedule.plan_network(specs, geom, batch=n,
+                                                    compressed=True)
+            return cache[n]
+        return f
+
+    fleet = []
+    for i, (name, n_slices, scale) in enumerate(FLEET_SPEC):
+        geom = (XEON_E5_35MB if n_slices == XEON_E5_35MB.n_slices
+                else XEON_E5_35MB.scaled(n_slices, name))
+        fleet.append(SimulatedEngine(name, schedule_for(geom), max_batch=4,
+                                     true_scale=scale, jitter=jitter,
+                                     seed=100 + i))
+    return fleet
+
+
+def make_poisson_trace(n: int, rate_hz: float, seed: int) -> list[float]:
+    """``n`` seeded Poisson arrival timestamps at ``rate_hz``."""
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate_hz, size=n)).tolist()
+
+
+def make_bursty_trace(n: int, rate_hz: float, seed: int, *,
+                      burst: float = 2.5, lull: float = 0.3,
+                      period_s: float = 2.0) -> list[float]:
+    """On/off-modulated Poisson: alternating ``period_s`` phases at
+    ``burst`` x and ``lull`` x the mean rate — queues build during bursts
+    and drain during lulls."""
+    rng = np.random.default_rng(seed)
+    out: list[float] = []
+    t = 0.0
+    while len(out) < n:
+        phase = burst if (int(t / period_s) % 2 == 0) else lull
+        t += float(rng.exponential(1.0 / (rate_hz * phase)))
+        out.append(t)
+    return out
+
+
+def replay(trace, router: str, *, slo_ms: float = SLO_MS,
+           fleet=None):
+    """Event-loop one arrival trace through an orchestrated fleet on a
+    fake clock; returns the drained :class:`Orchestrator`.
+
+    The clock jumps to the next event: the next arrival, the next
+    engine-free instant, or — only while a free engine exists and the
+    router is holding — a short recheck tick so holds release on time.
+    """
+    from repro.launch.engine_api import SimRequest
+    from repro.launch.orchestrator import Orchestrator
+
+    engines = make_fleet() if fleet is None else fleet
+    clock = {"t": 0.0}
+    orch = Orchestrator(engines, slo_ms=slo_ms, router=router,
+                        now_fn=lambda: clock["t"])
+    i, n = 0, len(trace)
+    hold_tick = (slo_ms / 1e3) / 8.0
+    while i < n or orch.pending:
+        while orch.step(now=clock["t"], flush=(i >= n)):
+            pass
+        cands = []
+        if i < n:
+            cands.append(trace[i])
+        nxt = orch.next_event_s(clock["t"])
+        if nxt > clock["t"]:
+            cands.append(nxt)
+        if orch.queue and any(e.ready_in(clock["t"]) <= 0.0
+                              and e.queue_depth == 0
+                              for e in orch.engines):
+            # a free engine + a held queue: wake soon to release the hold
+            cands.append(clock["t"] + hold_tick)
+        if not cands:
+            break
+        clock["t"] = max(clock["t"], min(cands))
+        while i < n and trace[i] <= clock["t"]:
+            orch.submit(SimRequest(rid=i), now=trace[i])
+            i += 1
+    return orch
+
+
+def _check_accounting(orch, n: int, label: str) -> None:
+    """The PR 9 accounting identities, fleet-wide — RAISES on violation."""
+    s = orch.stats()
+    if s["completed"] + s["failed"] != n:
+        raise RuntimeError(f"{label}: {s['completed']} completed + "
+                           f"{s['failed']} failed != {n} submitted")
+    if s["slo_hits"] + s["slo_misses"] != s["completed"] + s["failed"]:
+        raise RuntimeError(f"{label}: slo_hits {s['slo_hits']} + slo_misses "
+                           f"{s['slo_misses']} != completed + failed")
+    if orch.pending:
+        raise RuntimeError(f"{label}: {orch.pending} requests stranded")
+    batches = sum(s["batch_histogram"].values())
+    admitted = sum(n_ * c for n_, c in s["batch_histogram"].items())
+    if admitted != s["completed"] + s["failed"]:
+        raise RuntimeError(f"{label}: histogram admits {admitted} != "
+                           f"{s['completed'] + s['failed']} finished "
+                           f"({batches} batches)")
+
+
+def _replay_pair(trace_name: str, trace) -> tuple[list[str], dict]:
+    """Replay one trace through both routers; gate latency > round-robin."""
+    out = []
+    rates = {}
+    for router in ("latency", "round-robin"):
+        orch = replay(trace, router)
+        _check_accounting(orch, len(trace), f"{trace_name}/{router}")
+        s = orch.stats()
+        rates[router] = s["slo_hit_rate"]
+        mean_us = float(np.mean([r.latency_s for r in orch.completed])) * 1e6
+        tag = router.replace("-", "_")
+        out.append(_rec(f"replay/{trace_name}_{tag}", mean_us,
+                        f"{len(trace)} reqs, 3 sockets",
+                        f"hit_rate {s['slo_hit_rate']:.4f}; "
+                        f"dispatched {s['dispatched']}"))
+    if rates["latency"] <= rates["round-robin"]:
+        raise RuntimeError(
+            f"{trace_name}: latency router hit rate {rates['latency']:.4f} "
+            f"does not beat round-robin {rates['round-robin']:.4f} — the "
+            f"calibrated-curve routing rule regressed")
+    return out, rates
+
+
+def _real_fleet_bitidentity() -> str:
+    """Route real images through three real NCServingEngine sockets and
+    RAISE unless every logit row is byte-identical to standalone
+    ``nc_forward`` — whichever socket served it."""
+    import time
+
+    import jax
+
+    from repro.core.cache_geometry import XEON_E5_35MB
+    from repro.launch.orchestrator import Orchestrator
+    from repro.launch.serve import NCRequest, NCServingEngine
+    from repro.models import inception
+
+    cfg = inception.reduced_config(img=47, width_div=8, classes=8, stages=())
+    params = inception.init_params(jax.random.PRNGKey(0), config=cfg)
+    clock = {"t": 0.0}
+    engines = [
+        NCServingEngine(params, cfg, max_batch=2, geom=geom, name=name,
+                        now_fn=lambda: clock["t"])
+        for name, geom in [
+            ("socket-35MB", XEON_E5_35MB),
+            ("socket-17MB", XEON_E5_35MB.scaled(7, "xeon-17MB")),
+            ("socket-10MB", XEON_E5_35MB.scaled(4, "xeon-10MB")),
+        ]
+    ]
+    orch = Orchestrator(engines, slo_ms=1e7, now_fn=lambda: clock["t"])
+    rng = np.random.default_rng(0)
+    images = rng.uniform(size=(6, cfg.img, cfg.img, 3)).astype(np.float32)
+    t0 = time.perf_counter()
+    for i, img in enumerate(images):
+        orch.submit(NCRequest(rid=i, image=img), now=float(i))
+        clock["t"] = float(i)
+    clock["t"] = float(len(images))
+    orch.run()
+    wall_us = (time.perf_counter() - t0) * 1e6
+    _check_accounting(orch, len(images), "real-fleet")
+    for r in orch.completed:
+        ref, _ = inception.nc_forward(params, images[r.rid], config=cfg)
+        if not np.array_equal(np.asarray(r.logits), np.asarray(ref)):
+            raise RuntimeError(f"real-fleet: request {r.rid} logits differ "
+                               f"from standalone nc_forward")
+    served = {n: c for n, c in orch.dispatched.items() if c}
+    return row("replay/real_fleet_bitident", wall_us,
+               f"6 imgs byte-identical across {len(served)} real sockets")
+
+
+def run() -> list[str]:
+    out = []
+    poisson = make_poisson_trace(60_000, POISSON_RATE_HZ, seed=1)
+    bursty = make_bursty_trace(40_000, BURSTY_RATE_HZ, seed=2)
+    # >= 1e5 requests per router across the two gated traces
+    rows, p_rates = _replay_pair("poisson", poisson)
+    out.extend(rows)
+    rows, b_rates = _replay_pair("bursty", bursty)
+    out.extend(rows)
+    out.append(row("replay/gate", 0.0,
+                   f"latency beats round-robin: poisson "
+                   f"{p_rates['latency']:.4f} > {p_rates['round-robin']:.4f}, "
+                   f"bursty {b_rates['latency']:.4f} > "
+                   f"{b_rates['round-robin']:.4f}"))
+    out.append(_real_fleet_bitidentity())
+    return out
+
+
+def run_quick() -> list[str]:
+    """Sub-second smoke: a short Poisson trace, both routers, the same
+    accounting + router gates as the full replay.  Registers a retimer so
+    ``--only replay/`` can re-measure it."""
+    out = []
+    trace = make_poisson_trace(500, POISSON_RATE_HZ, seed=1)
+
+    def measure() -> float:
+        rates = {}
+        us = 0.0
+        for router in ("latency", "round-robin"):
+            orch = replay(trace, router)
+            _check_accounting(orch, len(trace), f"quick/{router}")
+            rates[router] = orch.stats()["slo_hit_rate"]
+            if router == "latency":
+                us = float(np.mean([r.latency_s
+                                    for r in orch.completed])) * 1e6
+        if rates["latency"] <= rates["round-robin"]:
+            raise RuntimeError(
+                f"quick: latency router hit rate {rates['latency']:.4f} "
+                f"does not beat round-robin {rates['round-robin']:.4f}")
+        return us
+
+    us = measure()
+    RETIMERS["replay/quick_poisson"] = measure
+    out.append(_rec("replay/quick_poisson", us, "500 reqs, 3 sockets",
+                    "mean latency, latency router; gates router + "
+                    "accounting"))
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+
+    rows = run_quick() if "--quick" in sys.argv[1:] else run()
+    print("\n".join(rows))

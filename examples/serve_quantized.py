@@ -61,7 +61,7 @@ def main_neural_cache(slo_ms: float, requests: int = 6,
     Logits are asserted bit-identical to standalone ``nc_forward`` runs —
     the SLO knob changes batch sizes, never results.
 
-    ``--compressed`` plans and executes from the ISSUE 8 CSR bit-plane
+    ``--compressed`` plans and executes from the PR 8 CSR bit-plane
     filter store (residency credit and any raised streaming ceiling show
     up in the printed stats); ``--warmup-replan`` re-plans the engine
     after the first batch from measured occupancy.  Both are
@@ -169,7 +169,7 @@ if __name__ == "__main__":
                          "implies integrity checking")
     ap.add_argument("--compressed", action="store_true",
                     help="plan + execute --neural-cache from the CSR "
-                         "bit-plane filter store (ISSUE 8); logits stay "
+                         "bit-plane filter store (PR 8); logits stay "
                          "byte-identical")
     ap.add_argument("--warmup-replan", action="store_true",
                     help="re-plan --neural-cache after the first batch "

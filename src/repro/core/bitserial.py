@@ -301,7 +301,7 @@ jax.tree_util.register_dataclass(
 
 @dataclasses.dataclass(frozen=True)
 class CompressedPlanes:
-    """CSR-style per-bit-plane filter store (ISSUE 8, EIE-inspired).
+    """CSR-style per-bit-plane filter store (PR 8, EIE-inspired).
 
     The sibling of :class:`PackedPlanes` for RESIDENT filters: instead of
     a dense ``(n_planes, n_columns, ...)`` word grid (one column per

@@ -105,7 +105,7 @@ class ConvStats:
     integrity_cycles: int = 0  # §III cycles charged for checksum columns
     reexec_cycles: int = 0  # §III cycles charged for pass re-executions
     quarantined_slices: tuple = ()  # slices lost to repeated failures
-    # ISSUE 8 compressed residency (all zero/False when the plan is
+    # PR 8 compressed residency (all zero/False when the plan is
     # uncompressed — the dense store runs bit for bit)
     compressed: bool = False  # filters lived CSR-per-bit-plane resident
     csr_payload_bytes: int = 0  # measured packed-word bytes of the store
@@ -327,7 +327,7 @@ def nc_conv2d(
     integrity is a plan decision: ``integrity=True`` alongside an
     explicit plan raises.
 
-    Compressed filter residency (ISSUE 8, ``compressed=True`` or a plan
+    Compressed filter residency (PR 8, ``compressed=True`` or a plan
     that set it): the layer's resident filter store is the CSR-per-bit-
     plane :class:`~repro.core.bitserial.CompressedPlanes` — live columns
     of live planes only — and each tile's filter slice is reconstructed
@@ -446,7 +446,7 @@ def nc_conv2d(
     # filters packed once per layer per batch; tiles slice the word grid.
     # Under §IV-E double buffering the pack is deferred to the per-tile
     # load stage instead (each tile's columns still pack exactly once).
-    # Compressed plans (ISSUE 8) keep the CSR-per-bit-plane store resident
+    # Compressed plans (PR 8) keep the CSR-per-bit-plane store resident
     # instead of the dense grid; tiles reconstruct their column slice.
     ww_all = cw_all = None
     if M_live and not overlap_exec:

@@ -69,7 +69,7 @@ present: ``occupancy=None`` (or zero detected sparsity) plans are
 field-for-field identical to dense plans, and the simulator's dense
 outputs stay bit-identical.  ``stream_batch_limit`` is intentionally
 pruning-independent (activations stream at full width either way) —
-until compression (ISSUE 8) opts the plan into the tighter staging
+until compression (PR 8) opts the plan into the tighter staging
 accounting that lets shrinking residency raise the ceiling (see
 ``NetworkSchedule.stream_batch_limit``).
 
@@ -158,7 +158,7 @@ class LayerOccupancy:
     plane_bits: int = 8
     dead_planes: int = 0
     activation_sparsity: float = 0.0  # est. zero fraction of INPUT lanes
-    # MEASURED live output lanes per image (ISSUE 8 warmup re-planning):
+    # MEASURED live output lanes per image (PR 8 warmup re-planning):
     # None = unmeasured, the estimate above stays advisory.  When set, the
     # §IV-D requant pass count shrinks to the live output set — zero output
     # lanes requantize to the analytically-known zero point, the same
@@ -281,7 +281,7 @@ class SlicePlan:
     # re-serialized over the surviving slices (the fault path's analogue of
     # the pruned-pass machinery); () <=> full slice pool, numbers untouched
     quarantined_slices: tuple[int, ...] = ()
-    # ISSUE 8 compressed residency: filters stored CSR-style per bit plane
+    # PR 8 compressed residency: filters stored CSR-style per bit plane
     # (bitserial.CompressedPlanes) — ``filter_bytes`` above is then the
     # compressed footprint (mapper.compressed_filter_bytes over the live
     # set) and ``dense_filter_bytes`` keeps the uncompressed residency the
@@ -383,7 +383,7 @@ def plan_layer(spec: LayerSpec,
     the mapper's.
 
     ``compressed=True`` stores the live filter set CSR-style per bit plane
-    (ISSUE 8): ``filter_bytes`` becomes the compressed footprint —
+    (PR 8): ``filter_bytes`` becomes the compressed footprint —
     ``mapper.compressed_filter_bytes`` over the live-set residency, live
     bit planes only plus the per-plane live-column index — and
     ``dense_filter_bytes`` records the uncompressed residency so the
@@ -436,7 +436,7 @@ def plan_layer(spec: LayerSpec,
             skipped = base_serial - live_passes
             filter_bytes = spec.R * spec.S * spec.C * occupancy.n_live
             if occupancy.live_outputs is not None:
-                # warmup-measured live output lanes (ISSUE 8): the §IV-D
+                # warmup-measured live output lanes (PR 8): the §IV-D
                 # lockstep requant runs over the live set only — zero
                 # lanes fill with the analytically-known zero point
                 live_out = max(0, min(int(occupancy.live_outputs),
@@ -453,7 +453,7 @@ def plan_layer(spec: LayerSpec,
     compressed = bool(compressed) and spec.kind in ("conv", "fc")
     dense_resident = filter_bytes if compressed else 0
     if compressed:
-        # CSR bit-plane residency (ISSUE 8): the ONE compressed-residency
+        # CSR bit-plane residency (PR 8): the ONE compressed-residency
         # rule — everything downstream (per-pass streaming, overlap
         # headroom, the simulator's credit) derives from this footprint
         plane_bits = occupancy.plane_bits if occupancy is not None else 8
@@ -516,7 +516,7 @@ class NetworkSchedule:
     batch: int
     overlap: bool = False  # §IV-E double buffering requested for the net
     integrity: bool = False  # PR 7 checksum verification requested
-    compressed: bool = False  # ISSUE 8 CSR bit-plane filter residency
+    compressed: bool = False  # PR 8 CSR bit-plane filter residency
 
     def plan(self, name: str) -> SlicePlan:
         for p in self.layers:
@@ -568,7 +568,7 @@ class NetworkSchedule:
         (asserted by tests/test_sparsity.py — a fully pruned network
         streams no deeper than a dense one).
 
-        Compressed plans (ISSUE 8) may additionally adopt the tighter
+        Compressed plans (PR 8) may additionally adopt the tighter
         per-layer staging accounting the compressed pipeline enables: a
         spilling layer's outputs round-trip DRAM (already priced per image
         via ``spill_bytes_per_image``) rather than staying staged, so they
@@ -614,7 +614,7 @@ def plan_network(specs: Sequence[LayerSpec] | Iterable[LayerSpec],
     requests PR 7 checksum verification for every compute layer;
     ``quarantined_slices`` re-serializes every layer over the surviving
     slice pool, and ``compressed`` stores every compute layer's filters
-    CSR-style per bit plane (ISSUE 8 — residency, streaming and the
+    CSR-style per bit plane (PR 8 — residency, streaming and the
     batch ceiling all shrink/raise together)."""
     occupancy = occupancy or {}
     return NetworkSchedule(

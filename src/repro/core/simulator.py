@@ -143,7 +143,7 @@ class LayerResult:
     # Kept OUT of mac_s/reduce_s so the §IV-E hidden-load credit (capped by
     # mac+reduce) is untouched and the additive-credit invariant is exact.
     integrity_s: float = 0.0
-    # ISSUE 8 compressed residency: the filter-load seconds compression
+    # PR 8 compressed residency: the filter-load seconds compression
     # keeps off the §VI-C per-batch load — (dense live-set bytes −
     # compressed bytes) / filter_bw, already inside filter_s because the
     # plan's filter_bytes IS the compressed footprint.  An exact additive
@@ -379,7 +379,7 @@ class NetworkResult:
 
     @property
     def residency_credit_s(self) -> float:
-        """ISSUE 8 compressed residency: filter-load seconds compression
+        """PR 8 compressed residency: filter-load seconds compression
         keeps off the per-batch load, summed over layers.  Batch-
         independent (filters load once per batch), so for overlap-off
         schedules ``batch_time_s(dense, N) - batch_time_s(compressed, N)

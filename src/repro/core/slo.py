@@ -40,9 +40,20 @@ Two pieces:
   (:meth:`~AdmissionPolicy.admit` reasons: ``full`` / ``ragged-early`` /
   ``hold`` / ``flush``).
 
+* :class:`ArrivalRateEstimator` (PR 9, closing PR 5's open thread) — an
+  EWMA over observed inter-arrival intervals.  Wired into a policy
+  (``arrivals=``), the hold decision stops being slack-only: a shallow
+  queue is held *only while the estimated time to fill the target batch
+  fits inside the remaining slack* — under sparse traffic the expected
+  fill time exceeds the slack immediately and the ragged batch flushes
+  early instead of burning deadline budget waiting for arrivals that are
+  not coming.
+
 Consumed by ``launch/serve.py::NCServingEngine`` (``--slo-ms``), which
 shares its per-batch-size plan cache with the model so admission decisions
-and execution price the very same :class:`NetworkSchedule` objects.
+and execution price the very same :class:`NetworkSchedule` objects, and by
+``launch/orchestrator.py``, which routes a global queue across N engines
+by each engine's own calibrated model (one estimator per orchestrator).
 """
 from __future__ import annotations
 
@@ -54,7 +65,56 @@ from repro.core.schedule import NetworkSchedule
 from repro.core.simulator import (NetworkResult, SimConstants, batch_time_s,
                                   simulate_network)
 
-__all__ = ["LatencyModel", "AdmissionDecision", "AdmissionPolicy"]
+__all__ = ["LatencyModel", "AdmissionDecision", "AdmissionPolicy",
+           "ArrivalRateEstimator"]
+
+
+class ArrivalRateEstimator:
+    """EWMA inter-arrival estimator (PR 9, closes PR 5's open thread).
+
+    ``observe(now)`` is called once per arriving request with the engine
+    clock; the estimator keeps an EWMA of the inter-arrival intervals.
+    ``expected_fill_time_s(k)`` answers the question the hold decision
+    actually asks — "how long until ``k`` more requests show up?" — as
+    ``k * mean_interval``.  With fewer than two arrivals there is no
+    interval information yet and it returns ``None`` (callers fall back
+    to the slack-only hold rule).
+    """
+
+    def __init__(self, ewma: float = 0.3):
+        self.ewma = float(ewma)
+        self.mean_interval_s: float | None = None
+        self._last_t: float | None = None
+        self.samples = 0  # arrivals observed (intervals = samples - 1)
+
+    def observe(self, now: float) -> None:
+        """Fold one arrival timestamp in (monotone engine-clock time)."""
+        if self._last_t is not None:
+            dt = max(now - self._last_t, 0.0)
+            if self.mean_interval_s is None:
+                self.mean_interval_s = dt
+            else:
+                self.mean_interval_s = (self.ewma * dt
+                                        + (1.0 - self.ewma)
+                                        * self.mean_interval_s)
+        self._last_t = now
+        self.samples += 1
+
+    @property
+    def rate_hz(self) -> float | None:
+        """Estimated arrival rate (None until two arrivals were seen)."""
+        if self.mean_interval_s is None:
+            return None
+        return 1.0 / max(self.mean_interval_s, 1e-12)
+
+    def expected_fill_time_s(self, k: int) -> float | None:
+        """Expected seconds until ``k`` further requests arrive (None
+        when the rate is still unknown)."""
+        if k <= 0:
+            return 0.0
+        if self.mean_interval_s is None:
+            return None
+        return k * self.mean_interval_s
 
 
 class LatencyModel:
@@ -108,7 +168,7 @@ class LatencyModel:
 
     def invalidate_plans(self) -> None:
         """Drop every memoized priced result — call after the serving
-        engine re-plans (ISSUE 8 warmup re-planning replaces the schedule
+        engine re-plans (PR 8 warmup re-planning replaces the schedule
         cache behind ``schedule_for``), so predictions re-price the NEW
         plans instead of serving a stale curve.  Calibration observations
         are kept: the wall/modeled scale tracks host effects, not the
@@ -125,7 +185,7 @@ class LatencyModel:
     def stream_batch_limit(self) -> int:
         """The §VI-C streaming bound of the planned network (images the
         reserved I/O way stages at once).  Pruning-independent for
-        uncompressed plans; compressed plans (ISSUE 8) may stage deeper —
+        uncompressed plans; compressed plans (PR 8) may stage deeper —
         see ``NetworkSchedule.stream_batch_limit``."""
         return self._schedule_for(1).stream_batch_limit
 
@@ -192,7 +252,8 @@ class AdmissionDecision:
     ``admit`` is the number of requests to pop now (0 = keep holding for a
     fuller batch); ``target`` the SLO-optimal batch size for the current
     budget; ``budget_s`` the oldest queued request's remaining deadline
-    budget; ``reason`` one of ``full`` (queue covers the target),
+    budget (``float("nan")`` when the queue is empty — no oldest request,
+    no budget); ``reason`` one of ``full`` (queue covers the target),
     ``ragged-early`` (deadline pressure flushed a partial batch),
     ``flush`` (caller forced draining) or ``hold``."""
 
@@ -212,12 +273,17 @@ class AdmissionPolicy:
     whose predicted p99 exceeds the remaining budget.  ``hold_slack_s``
     is how much deadline slack a partial batch may retain before the
     policy keeps holding for more arrivals (default: a quarter of the
-    SLO)."""
+    SLO).  ``arrivals`` (optional, PR 9) is an
+    :class:`ArrivalRateEstimator`: when set, a shallow queue is held only
+    while the estimated time to fill the target batch fits inside the
+    remaining slack — sparse traffic flushes ragged batches immediately
+    instead of holding until the slack rule fires."""
 
     model: LatencyModel
     slo_s: float
     max_batch: int
     hold_slack_s: float | None = None
+    arrivals: ArrivalRateEstimator | None = None
 
     @property
     def hold_slack(self) -> float:
@@ -256,11 +322,17 @@ class AdmissionPolicy:
         as deep as the target admits immediately; a shallower (ragged)
         queue is held for more arrivals until its remaining slack after
         execution would drop below ``hold_slack``, then admitted early so
-        the deadline survives.  ``flush=True`` (draining: no more
-        arrivals are coming) disables holding but keeps the SLO batch
-        cap."""
+        the deadline survives.  With an ``arrivals`` estimator the hold
+        is additionally bounded by traffic: holding is only worth it if
+        the expected time to fill the target batch fits inside the slack.
+        ``flush=True`` (draining: no more arrivals are coming) disables
+        holding but keeps the SLO batch cap.
+
+        An empty queue holds trivially; there is no oldest request, so no
+        deadline budget exists — ``budget_s`` is reported as
+        ``float("nan")``, not a number pretending to be one."""
         if queued <= 0:
-            return AdmissionDecision(0, 0, self.slo_s, "hold")
+            return AdmissionDecision(0, 0, float("nan"), "hold")
         budget = self.slo_s - oldest_wait_s
         target = self.target_batch(max(budget, 0.0))
         if queued >= target:
@@ -270,4 +342,12 @@ class AdmissionPolicy:
         slack = budget - self.model.predict_p99_s(queued)
         if slack <= self.hold_slack:
             return AdmissionDecision(queued, target, budget, "ragged-early")
+        if self.arrivals is not None:
+            # holding only pays off if the missing requests are expected
+            # to show up before the slack runs out; unknown rate (fewer
+            # than two arrivals seen) falls back to the slack-only rule
+            fill = self.arrivals.expected_fill_time_s(target - queued)
+            if fill is not None and fill >= slack:
+                return AdmissionDecision(queued, target, budget,
+                                         "ragged-early")
         return AdmissionDecision(0, target, budget, "hold")

@@ -52,6 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import REGISTRY, get_config, reduced_config
+from repro.launch.engine_api import Engine as _EngineAPI
 from repro.launch.mesh import make_local_mesh
 from repro.models import transformer as T
 
@@ -96,8 +97,8 @@ class BatchQueueEngine:
     def _fail_requests(self, reqs, err: BaseException | str) -> None:
         """Mark ``reqs`` failed with the error recorded, engine-wide and
         per-request; they are terminal (never re-queued)."""
-        msg = str(err) or type(err).__name__ if isinstance(
-            err, BaseException) else str(err)
+        msg = ((str(err) or type(err).__name__)
+               if isinstance(err, BaseException) else str(err))
         self.errors.append(msg)
         for r in reqs:
             r.done = True
@@ -146,10 +147,16 @@ class ServingEngine(BatchQueueEngine):
         self._admit()
         if not any(s.active for s in self.slots):
             return False
-        pos = max(s.pos for s in self.slots if s.active)
+        # per-slot positions: slots admitted with different prompt lengths
+        # decode — and write KV — each at its OWN position (decoding every
+        # slot at max(pos) corrupted shorter sequences; PR 9 bugfix).
+        # Inactive slots pass 0; their rows are ignored and overwritten by
+        # the next admission's prefill
+        pos = jnp.asarray([s.pos if s.active else 0 for s in self.slots],
+                          jnp.int32)
         try:
             logits, self.caches = self._decode(self.params, self.tokens,
-                                               self.caches, jnp.int32(pos))
+                                               self.caches, pos)
         except Exception as e:  # noqa: BLE001 — batch-failure contract
             # the fused decode advances every active slot at once, so a
             # mid-batch failure fails exactly the admitted batch (the
@@ -212,7 +219,7 @@ class NCRequest:
     slo_ok: bool | None = None  # None when the engine has no SLO set
 
 
-class NCServingEngine(BatchQueueEngine):
+class NCServingEngine(BatchQueueEngine, _EngineAPI):
     """Batched Neural Cache inference server.
 
     Each ``step()`` admits up to ``max_batch`` queued images and executes
@@ -233,7 +240,7 @@ class NCServingEngine(BatchQueueEngine):
     free.  Unpruned weights detect zero sparsity and plan exactly dense.
 
     ``overlap=True`` (the default) plans every batch size double-buffered
-    (ISSUE 6 / §IV-E): serialized passes whose next filter columns fit the
+    (PR 6 / §IV-E): serialized passes whose next filter columns fit the
     reserved I/O way stream those columns under the previous pass's
     MAC+reduce, so ``simulator.batch_time_s`` — and therefore the
     ``LatencyModel`` below — prices the overlapped pipeline the engine
@@ -253,7 +260,7 @@ class NCServingEngine(BatchQueueEngine):
     ``nc_forward``, so logits stay bit-identical to standalone runs
     whatever batch sizes the policy picks.
 
-    ``compressed=True`` (ISSUE 8) plans every batch size with CSR
+    ``compressed=True`` (PR 8) plans every batch size with CSR
     bit-plane filter residency (``plan_network(..., compressed=True)``):
     resident filters shrink to their live bit planes plus a per-plane
     live-column bitmap, the modeled time earns the exact residency
@@ -262,7 +269,7 @@ class NCServingEngine(BatchQueueEngine):
     (the SLO policy's hard batch cap) can only rise.  Logits stay
     byte-identical to the dense store.
 
-    ``warmup_replan=True`` (ISSUE 8) treats the first successfully served
+    ``warmup_replan=True`` (PR 8) treats the first successfully served
     batch as a measurement: its report's observed per-layer input
     sparsity and live output bytes replace the advisory ReLU-chain
     estimate (``inception.observed_occupancy``), every cached plan is
@@ -300,13 +307,15 @@ class NCServingEngine(BatchQueueEngine):
                  overlap: bool = True, integrity: bool = False,
                  compressed: bool = False, warmup_replan: bool = False,
                  slo_ms: float | None = None,
-                 hold_slack_ms: float | None = None, now_fn=time.monotonic):
+                 hold_slack_ms: float | None = None, now_fn=time.monotonic,
+                 name: str = "nc-engine"):
         from repro.core import schedule as nc_schedule
         from repro.core import slo as nc_slo
         from repro.core.cache_geometry import XEON_E5_35MB
         from repro.models import inception
 
         super().__init__()
+        self.name = name
         self._inception = inception
         self._plan_network = nc_schedule.plan_network
         self.config = config or inception.REDUCED
@@ -341,13 +350,18 @@ class NCServingEngine(BatchQueueEngine):
         # SLO control loop: the latency model prices the SAME plan objects
         # this engine executes (shared _schedule_for cache)
         self.latency_model = nc_slo.LatencyModel(self._schedule_for)
+        # EWMA inter-arrival estimator (PR 9): bounds the policy's hold —
+        # a shallow queue is kept waiting only while the target batch is
+        # expected to fill inside the remaining slack
+        self.arrivals = nc_slo.ArrivalRateEstimator()
         self.slo_s = slo_ms / 1e3 if slo_ms is not None else None
         self.policy = None
         if self.slo_s is not None:
             self.policy = nc_slo.AdmissionPolicy(
                 self.latency_model, self.slo_s, max_batch,
                 hold_slack_s=(hold_slack_ms / 1e3
-                              if hold_slack_ms is not None else None))
+                              if hold_slack_ms is not None else None),
+                arrivals=self.arrivals)
         self.decisions = []
         self.batch_histogram: dict[int, int] = {}
         self.slo_hits = 0
@@ -364,7 +378,7 @@ class NCServingEngine(BatchQueueEngine):
         return self._schedules[n]
 
     def _replan_from_report(self, report) -> None:
-        """Warmup re-planning (ISSUE 8): replace the advisory ReLU-chain
+        """Warmup re-planning (PR 8): replace the advisory ReLU-chain
         occupancy estimate with what the warmup batch MEASURED —
         ``inception.observed_occupancy`` re-scans the resident filters and
         takes each conv's input sparsity and live output bytes from the
@@ -399,6 +413,7 @@ class NCServingEngine(BatchQueueEngine):
 
     def submit(self, req, now: float | None = None) -> None:
         req.arrival_t = self.now_fn() if now is None else now
+        self.arrivals.observe(req.arrival_t)
         super().submit(req)
 
     def step(self, now: float | None = None, *, flush: bool = False) -> bool:
@@ -430,7 +445,21 @@ class NCServingEngine(BatchQueueEngine):
             if logits is None:
                 # unreclaimable: the whole ladder failed — the batch is
                 # marked failed with the error recorded, and the engine
-                # keeps draining the rest of the queue
+                # keeps draining the rest of the queue.  The batch still
+                # HAPPENED: its requests waited and its wall was burned, so
+                # it lands in the histogram, its requests are stamped as
+                # SLO misses, and the wall is routed through ``exclude``
+                # (it executed no single plan the model prices) — without
+                # this, slo_hit_rate overstates under faults and
+                # calibration_excluded undercounts
+                wall = time.perf_counter() - t0
+                self.latency_model.exclude(n, wall)
+                self.batch_histogram[n] = self.batch_histogram.get(n, 0) + 1
+                for r in batch:
+                    r.latency_s = (now - r.arrival_t) + wall
+                    if self.slo_s is not None:
+                        r.slo_ok = False
+                        self.slo_misses += 1
                 self.steps += 1
                 return True
         wall = time.perf_counter() - t0
@@ -528,6 +557,22 @@ class NCServingEngine(BatchQueueEngine):
     def slo_hit_rate(self) -> float | None:
         total = self.slo_hits + self.slo_misses
         return self.slo_hits / total if total else None
+
+    # -- Engine API (PR 9, launch/engine_api.py) -----------------------------
+    @property
+    def queue_depth(self) -> int:
+        """Requests owned by this engine but not yet executed."""
+        return len(self.queue)
+
+    @property
+    def batch_cap(self) -> int:
+        """Hard admission bound: ``max_batch`` and the §VI-C streaming
+        limit, whichever bites first (what the orchestrator may dispatch
+        at once)."""
+        if self.policy is not None:
+            return self.policy.batch_cap
+        return max(1, min(self.max_batch,
+                          self.latency_model.stream_batch_limit))
 
     def stats(self) -> dict:
         """Serving stats: admitted-batch histogram, SLO accounting, the
@@ -646,7 +691,7 @@ def main() -> int:
                          "double-buffered per §IV-E headroom")
     ap.add_argument("--compressed", action="store_true",
                     help="plan --neural-cache batches with CSR bit-plane "
-                         "filter residency (ISSUE 8): smaller resident "
+                         "filter residency (PR 8): smaller resident "
                          "footprint, exact modeled residency credit, and "
                          "a raised streaming batch ceiling; logits stay "
                          "byte-identical")

@@ -558,7 +558,7 @@ def network_occupancy(wpack: dict, config: InceptionConfig = REDUCED) -> dict:
 
 def observed_occupancy(wpack: dict, config: InceptionConfig,
                        report: "NCForwardReport") -> dict:
-    """Measured per-layer occupancy from a completed forward pass (ISSUE 8
+    """Measured per-layer occupancy from a completed forward pass (PR 8
     warmup re-planning): the filter side re-runs the deterministic
     pack-time scan exactly like :func:`network_occupancy`, but the
     activation side is OBSERVED, not estimated — each conv's input
@@ -887,7 +887,7 @@ def nc_forward(params: dict, x: jax.Array,
     explicit ``schedule`` (build that with ``plan_network(...,
     integrity=True)`` instead).
 
-    ``compressed=True`` plans CSR bit-plane filter residency (ISSUE 8):
+    ``compressed=True`` plans CSR bit-plane filter residency (PR 8):
     every conv/fc layer's resident footprint shrinks to the live bit
     planes plus a per-plane live-column bitmap
     (``mapper.compressed_filter_bytes``), the engine stores and streams

@@ -244,8 +244,49 @@ def flash_attention(
     return out.astype(v.dtype)
 
 
+def _decode_mask(pos, S: int, window: int = 0):
+    """Causal key mask for single-token decode: ``[1,1,1,1,S]`` for a
+    scalar position shared by the batch, ``[B,1,1,1,S]`` for an int32
+    ``[B]`` vector of per-row positions (continuous batching decodes
+    each slot at its OWN position)."""
+    pos = jnp.asarray(pos)
+    kpos = jnp.arange(S)
+    if pos.ndim > 0:
+        mask = kpos[None, :] <= pos[:, None]
+        if window > 0:
+            mask &= kpos[None, :] > pos[:, None] - window
+        return mask[:, None, None, None, :]
+    mask = kpos <= pos
+    if window > 0:
+        mask &= kpos > pos - window
+    return mask[None, None, None, None]
+
+
+def _ring_mask(ring_slot, ring_len, S: int):
+    """Slot-age mask for SWA ring caches, scalar or per-row vector."""
+    ring_slot = jnp.asarray(ring_slot)
+    ring_len = jnp.asarray(ring_len)
+    kpos = jnp.arange(S)
+    if ring_slot.ndim > 0:
+        age = (ring_slot[:, None] - kpos[None, :]) % S
+        return (age < ring_len[:, None])[:, None, None, None, :]
+    age = (ring_slot - kpos) % S  # 0 = newest
+    return (age < ring_len)[None, None, None, None]
+
+
+def _cache_row_update(cache_arr, new_vals, slot):
+    """Write each batch row's single-position update at its OWN cache
+    slot: ``cache_arr`` [B,Hkv,W,*], ``new_vals`` [B,Hkv,1,*], ``slot``
+    int32 [B] — the vector counterpart of ``dynamic_update_slice_in_dim``
+    on axis 2."""
+    return jax.vmap(
+        lambda c, n, s: jax.lax.dynamic_update_slice_in_dim(c, n, s, axis=1)
+    )(cache_arr, new_vals, slot)
+
+
 def decode_attention(q, k_cache, v_cache, pos, window: int = 0):
-    """Single-token attention over a [B,Hkv,S,D] cache; pos = current index."""
+    """Single-token attention over a [B,Hkv,S,D] cache; pos = current
+    index (scalar, or int32 [B] per-row positions)."""
     B, H, _, D = q.shape
     Hkv, S = k_cache.shape[1], k_cache.shape[2]
     G = H // Hkv
@@ -253,11 +294,7 @@ def decode_attention(q, k_cache, v_cache, pos, window: int = 0):
     scale = 1.0 / math.sqrt(D)
     s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k_cache,
                    preferred_element_type=jnp.float32) * scale
-    kpos = jnp.arange(S)
-    mask = kpos <= pos
-    if window > 0:
-        mask &= kpos > pos - window
-    s = jnp.where(mask[None, None, None, None], s, -jnp.inf)
+    s = jnp.where(_decode_mask(pos, S, window), s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)
@@ -276,14 +313,23 @@ def attention_apply(cfg, p, x, positions, *, window=0, cache=None, cache_pos=Non
     kv8 = cfg.kv_dtype == "int8"
     if cache is not None and T == 1 and kv8:
         W = cache["k"].shape[2]
+        per_row = jnp.ndim(cache_pos) > 0  # int32 [B] per-slot positions
+        if per_row:
+            cache_pos = jnp.asarray(cache_pos, jnp.int32).reshape(-1)
         slot = cache_pos % W if window > 0 else cache_pos
         kq, ks1 = kv_quantize(k)
         vq, vs1 = kv_quantize(v)
-        dus = jax.lax.dynamic_update_slice_in_dim
-        new_cache = {"k": dus(cache["k"], kq, slot, axis=2),
-                     "v": dus(cache["v"], vq, slot, axis=2),
-                     "ks": dus(cache["ks"], ks1, slot, axis=2),
-                     "vs": dus(cache["vs"], vs1, slot, axis=2)}
+        if per_row:
+            new_cache = {"k": _cache_row_update(cache["k"], kq, slot),
+                         "v": _cache_row_update(cache["v"], vq, slot),
+                         "ks": _cache_row_update(cache["ks"], ks1, slot),
+                         "vs": _cache_row_update(cache["vs"], vs1, slot)}
+        else:
+            dus = jax.lax.dynamic_update_slice_in_dim
+            new_cache = {"k": dus(cache["k"], kq, slot, axis=2),
+                         "v": dus(cache["v"], vq, slot, axis=2),
+                         "ks": dus(cache["ks"], ks1, slot, axis=2),
+                         "vs": dus(cache["vs"], vs1, slot, axis=2)}
         if window > 0:
             ring_len = jnp.minimum(cache_pos + 1,
                                    W if window >= W else window)
@@ -298,21 +344,29 @@ def attention_apply(cfg, p, x, positions, *, window=0, cache=None, cache_pos=Non
         out = out.astype(x.dtype)
     elif cache is not None and T == 1:
         W = cache["k"].shape[2]
+        per_row = jnp.ndim(cache_pos) > 0  # int32 [B] per-slot positions
+        if per_row:
+            cache_pos = jnp.asarray(cache_pos, jnp.int32).reshape(-1)
         slot = cache_pos % W if window > 0 else cache_pos
-        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=2)
-        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=2)
+        if per_row:
+            kc = _cache_row_update(cache["k"], k, slot)
+            vc = _cache_row_update(cache["v"], v, slot)
+        else:
+            kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot,
+                                                     axis=2)
+            vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot,
+                                                     axis=2)
         new_cache = {"k": kc, "v": vc}
         if window > 0:
             # ring buffer: positions are implicit; rebuild kpos mask by slot age
-            kpos = jnp.arange(W)
-            age = (slot - kpos) % W  # 0 = newest
-            mask = age < jnp.minimum(cache_pos + 1, W if window >= W else window)
+            ring_len = jnp.minimum(cache_pos + 1, W if window >= W else window)
+            mask = _ring_mask(slot, ring_len, W)
             s = jnp.einsum(
                 "bhgqd,bhkd->bhgqk",
                 q.reshape(B, cfg.n_kv_heads, cfg.q_groups, 1, cfg.hd), kc,
                 preferred_element_type=jnp.float32,
             ) / math.sqrt(cfg.hd)
-            s = jnp.where(mask[None, None, None, None], s, -jnp.inf)
+            s = jnp.where(mask, s, -jnp.inf)
             pr = jax.nn.softmax(s, axis=-1)
             out = jnp.einsum("bhgqk,bhkd->bhgqd", pr.astype(vc.dtype), vc,
                              preferred_element_type=jnp.float32)
@@ -396,15 +450,10 @@ def decode_attention_q8(q, kq, ks, vq, vs, pos, window: int = 0,
     s = (s_int.astype(jnp.float32) * qs
          * ks[..., 0][:, :, None, None, :]) / math.sqrt(D)
     if ring_slot is not None:  # SWA ring buffer: mask by slot age
-        kpos = jnp.arange(S)
-        age = (ring_slot - kpos) % S
-        mask = age < ring_len
+        mask = _ring_mask(ring_slot, ring_len, S)
     else:
-        kpos = jnp.arange(S)
-        mask = kpos <= pos
-        if window > 0:
-            mask &= kpos > pos - window
-    s = jnp.where(mask[None, None, None, None], s, -jnp.inf)
+        mask = _decode_mask(pos, S, window)
+    s = jnp.where(mask, s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)  # [B,Hkv,G,1,S]
     # fold per-position value scales into p, requantize rows to int8
     pv = p * vs[..., 0][:, :, None, None, :]

@@ -364,8 +364,16 @@ def prefill(cfg, params, tokens=None, *, embeds=None, max_len: int | None = None
 
 
 def decode_step(cfg, params, tokens, caches, pos):
-    """One token for the whole batch.  tokens [B,1]; pos: scalar position."""
-    positions = jnp.full((tokens.shape[0], 1), pos, jnp.int32)
+    """One token for the whole batch.  tokens [B,1]; pos: scalar position
+    shared by every row, or an int32 [B] vector of per-slot positions —
+    continuous batching admits prompts of different lengths, so each slot
+    must decode (RoPE) and write KV at its OWN position, not the batch
+    max (PR 9 bugfix)."""
+    if jnp.ndim(pos) > 0:
+        pos = jnp.asarray(pos, jnp.int32).reshape(-1)
+        positions = pos[:, None]
+    else:
+        positions = jnp.full((tokens.shape[0], 1), pos, jnp.int32)
     hidden, caches = lm_apply(cfg, params, tokens, positions=positions,
                               caches=caches, cache_pos=pos)
     return lm_logits(cfg, params, hidden[:, 0]), caches

@@ -26,5 +26,8 @@ def test_bench_quick_mode_exits_clean():
     assert lines[0] == "name,us_per_call,derived"
     kernel_rows = [l for l in lines[1:] if l.startswith("kernel/")]
     assert len(kernel_rows) >= 6, res.stdout
+    # PR 9: the traffic-replay smoke rides along (router + accounting gates)
+    replay_rows = [l for l in lines[1:] if l.startswith("replay/")]
+    assert len(replay_rows) >= 1, res.stdout
     # quick mode must never rewrite the committed baseline
     assert "baseline not" in res.stderr and "rewritten" in res.stderr

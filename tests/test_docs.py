@@ -154,7 +154,7 @@ def test_fenced_commands_runnable(doc):
 
 
 def test_docs_cover_required_pages():
-    """The ISSUE-5 docs subsystem (+ the ISSUE-7 reliability page):
+    """The PR-5 docs subsystem (+ the PR-7 reliability page):
     architecture + serving + reliability + README."""
     names = {d.name for d in DOCS}
     assert {"README.md", "ARCHITECTURE.md", "SERVING.md",

@@ -67,3 +67,26 @@ def test_kv8_cache_is_int8():
     # payload+scales cost ~ (1 + 4/hd) bytes/elem vs 2 for bf16
     bytes8 = c["k"].nbytes + c["ks"].nbytes
     assert bytes8 < 0.7 * (c["k"].size * 2)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-7b", "hymba-1.5b"])
+@pytest.mark.parametrize("quant", [False, True])
+def test_decode_vector_positions_match_scalar(arch, quant):
+    """PR 9: decode_step accepts a per-row int32 [B] position vector (the
+    serving engine's mixed-prompt batches).  A uniform vector must be
+    BYTE-identical to the scalar path — logits and every cache leaf —
+    for fp and int8 caches, full attention and SWA rings."""
+    cfg, cfg8 = _cfgs(arch)
+    cfg = cfg8 if quant else cfg
+    params = T.init_lm(cfg, jax.random.key(0))
+    prompt = jax.random.randint(jax.random.key(1), (2, 6), 2, 128)
+    _, caches = T.prefill(cfg, params, prompt, max_len=32)
+    toks = jnp.asarray([[3], [4]], jnp.int32)
+    pos = prompt.shape[1]
+    logits_s, caches_s = T.decode_step(cfg, params, toks, caches, pos)
+    logits_v, caches_v = T.decode_step(cfg, params, toks, caches,
+                                       jnp.full((2,), pos, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(logits_s),
+                                  np.asarray(logits_v))
+    for ls, lv in zip(jax.tree.leaves(caches_s), jax.tree.leaves(caches_v)):
+        np.testing.assert_array_equal(np.asarray(ls), np.asarray(lv))

@@ -1,0 +1,306 @@
+"""Multi-engine orchestrator (PR 9): engine API, latency routing,
+fleet-level accounting.
+
+Covers the :class:`~repro.launch.engine_api.Engine` contract (real +
+simulated implementations), per-engine calibration isolation, the
+latency router's preference for the calibrated-faster socket, the
+``wait-better`` hold (waiting for a busy fast engine beats dispatching
+to a free slow one), the arrival-rate-bounded hold at fleet level,
+round-robin as the baseline foil, drain-with-flush leaving nothing
+stranded, and bit-identity of routed results vs standalone
+``nc_forward`` whichever real engine serves."""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.cache_geometry import XEON_E5_35MB
+from repro.core.schedule import plan_network
+from repro.launch.engine_api import Engine, SimRequest, SimulatedEngine
+from repro.launch.orchestrator import Orchestrator
+from repro.models import inception
+
+
+@pytest.fixture(scope="module")
+def sched_for():
+    """Per-geometry plan caches over the full Inception specs (compressed
+    plans: the 14-slice socket streams 2 images, smaller sockets 1)."""
+    specs = inception.inception_v3_specs()
+    caches: dict = {}
+
+    def for_slices(n_slices: int):
+        geom = (XEON_E5_35MB if n_slices == XEON_E5_35MB.n_slices
+                else XEON_E5_35MB.scaled(n_slices))
+        cache = caches.setdefault(n_slices, {})
+
+        def f(n):
+            if n not in cache:
+                cache[n] = plan_network(specs, geom, batch=n,
+                                        compressed=True)
+            return cache[n]
+        return f
+    return for_slices
+
+
+def _drain(orch, clock, tick=1e-4):
+    """Drive a fake-clock fleet to empty: step, then jump the clock to
+    the next engine-free instant (or nudge it when holding)."""
+    guard = 0
+    while orch.pending:
+        while orch.step(now=clock["t"], flush=True):
+            pass
+        if not orch.pending:
+            break
+        nxt = orch.next_event_s(clock["t"])
+        clock["t"] = nxt if nxt > clock["t"] else clock["t"] + tick
+        guard += 1
+        assert guard < 100_000, "fleet failed to drain"
+    return orch
+
+
+# ---------------------------------------------------------------------------
+# Engine API contract
+# ---------------------------------------------------------------------------
+def test_simulated_engine_implements_engine_api(sched_for):
+    e = SimulatedEngine("sock", sched_for(14), max_batch=4)
+    assert isinstance(e, Engine)
+    assert e.queue_depth == 0 and e.ready_in(0.0) == 0.0
+    # compressed 14-slice plan streams 2 images; max_batch doesn't bite
+    assert e.batch_cap == min(4, e.latency_model.stream_batch_limit)
+    e.submit(SimRequest(rid=0), now=0.0)
+    assert e.queue_depth == 1
+    assert e.step(now=0.0) is True
+    # fake-clock execution: busy until the simulated wall elapses
+    assert e.busy_until > 0.0 and e.ready_in(0.0) > 0.0
+    assert e.step(now=0.0) is False  # busy engines admit nothing
+    assert e.queue_depth == 0 and len(e.completed) == 1
+    assert e.completed[0].done and e.completed[0].latency_s > 0.0
+    # the simulated wall calibrated the model like a measured one
+    assert e.latency_model.samples == 1
+
+
+def test_orchestrator_validates_fleet():
+    with pytest.raises(ValueError, match="at least one"):
+        Orchestrator([])
+    fake = [SimRequest(rid=0), SimRequest(rid=1)]  # not engines, same name
+    for r in fake:
+        r.name = "dup"
+    with pytest.raises(ValueError, match="unique"):
+        Orchestrator(fake)
+    fake[1].name = "other"
+    with pytest.raises(ValueError, match="router"):
+        Orchestrator(fake, router="fastest")
+
+
+# ---------------------------------------------------------------------------
+# Calibration isolation + routing preference
+# ---------------------------------------------------------------------------
+def test_per_engine_calibration_isolation(sched_for):
+    """Each engine's LatencyModel learns its OWN true speed from its own
+    batches — a slow socket never contaminates a fast one's curve."""
+    fast = SimulatedEngine("fast", sched_for(14), max_batch=2,
+                           true_scale=1.0)
+    slow = SimulatedEngine("slow", sched_for(14), max_batch=2,
+                           true_scale=3.0)
+    clock = {"t": 0.0}
+    orch = Orchestrator([fast, slow], now_fn=lambda: clock["t"])
+    for i in range(8):
+        orch.submit(SimRequest(rid=i), now=0.0)
+    _drain(orch, clock)
+    assert len(orch.completed) == 8 and orch.pending == 0
+    # jitter=0: every observed ratio is exactly the engine's true scale
+    assert fast.latency_model.scale == pytest.approx(1.0)
+    assert slow.latency_model.scale == pytest.approx(3.0)
+    # each model saw exactly its own engine's batches
+    assert fast.latency_model.samples == fast.steps
+    assert slow.latency_model.samples == slow.steps
+    assert fast.steps + slow.steps == sum(
+        orch.stats()["batch_histogram"].values())
+
+
+def test_latency_router_prefers_calibrated_faster_engine(sched_for):
+    """Same geometry, different true speeds, both meeting the deadline:
+    the router's -p99 tie-break sends every unloaded dispatch to the
+    calibrated-faster socket."""
+    fast = SimulatedEngine("fast", sched_for(14), max_batch=1,
+                           true_scale=1.0)
+    slow = SimulatedEngine("slow", sched_for(14), max_batch=1,
+                           true_scale=4.0)
+    m = fast.latency_model.modeled_batch_s(1)
+    for e in (fast, slow):  # pre-calibrate both curves
+        e.latency_model.observe(1, e.true_scale * m)
+    clock = {"t": 0.0}
+    orch = Orchestrator([fast, slow], slo_ms=100 * m * 1e3,
+                        now_fn=lambda: clock["t"])
+    for i in range(5):
+        # arrivals spaced so the fast engine is always free again
+        t = i * 2.0 * m
+        clock["t"] = t
+        orch.submit(SimRequest(rid=i), now=t)
+        orch.step(now=t)
+    _drain(orch, clock)
+    assert orch.dispatched == {"fast": 5, "slow": 0}
+    assert orch.slo_hits == 5 and orch.slo_misses == 0
+
+
+def test_wait_better_holds_for_busy_fast_engine(sched_for):
+    """No free engine makes the deadline, but the busy fast one would
+    after freeing: the router waits for it instead of burning the
+    request on the free slow socket — the call a latency-blind router
+    cannot make."""
+    fast = SimulatedEngine("fast", sched_for(14), max_batch=1,
+                           true_scale=1.0)
+    slow = SimulatedEngine("slow", sched_for(14), max_batch=1,
+                           true_scale=4.0)
+    m = fast.latency_model.modeled_batch_s(1)
+    for e in (fast, slow):
+        e.latency_model.observe(1, e.true_scale * m)
+    # p99 = 1.25 x scale x modeled: fast 1.25m, slow 5m.  SLO 3m: the
+    # slow socket can never meet it.
+    clock = {"t": 0.0}
+    orch = Orchestrator([fast, slow], slo_ms=3 * m * 1e3,
+                        now_fn=lambda: clock["t"])
+    orch.submit(SimRequest(rid=0), now=0.0)
+    assert orch.step(now=0.0)  # dispatched to fast; busy until m
+    assert orch.dispatched["fast"] == 1 and fast.ready_in(0.0) > 0.0
+    orch.submit(SimRequest(rid=1), now=0.0)
+    assert orch.step(now=0.0) is False  # slow is free but would miss
+    assert orch.decisions[-1].reason == "wait-better"
+    assert orch.dispatched["slow"] == 0 and len(orch.queue) == 1
+    clock["t"] = fast.busy_until
+    assert orch.step(now=clock["t"])  # fast freed: dispatch there
+    assert orch.dispatched == {"fast": 2, "slow": 0}
+    _drain(orch, clock)
+    assert orch.slo_hits == 2 and orch.slo_misses == 0
+
+
+def test_orchestrator_hold_bounded_by_arrival_rate(sched_for):
+    """Fleet-level ragged-tail hold: unknown rate falls back to the
+    slack rule (hold), sparse traffic flushes immediately."""
+    eng = SimulatedEngine("sock", sched_for(14), max_batch=2,
+                          true_scale=1.0)
+    eng.latency_model.observe(1, eng.latency_model.modeled_batch_s(1))
+    m = eng.latency_model.modeled_batch_s(1)
+    clock = {"t": 0.0}
+    # SLO 3m: slack after a single-image batch is ~1.75m (above the
+    # 0.75m default hold slack, so the slack-only rule alone would hold)
+    orch = Orchestrator([eng], slo_ms=3 * m * 1e3,
+                        now_fn=lambda: clock["t"])
+    assert eng.batch_cap == 2  # compressed 14-slice plan streams 2
+    orch.submit(SimRequest(rid=0), now=0.0)
+    # one arrival: rate unknown, plenty of slack -> hold for a 2-batch
+    assert orch.step(now=0.0) is False
+    assert orch.decisions[-1].reason == "hold"
+    orch.step(now=0.0, flush=True)  # drain it
+    clock["t"] = 40 * m
+    orch.submit(SimRequest(rid=1), now=clock["t"])
+    # two arrivals 40m apart: filling the 2-batch is expected to take
+    # ~40m, far beyond the ~1.75m slack -> flush the ragged tail NOW
+    assert orch.step(now=clock["t"]) is True
+    assert orch.decisions[-1].reason == "ragged-early"
+    assert orch.decisions[-1].admit == 1
+    _drain(orch, clock)
+    assert orch.pending == 0
+
+
+# ---------------------------------------------------------------------------
+# Round-robin foil + drain accounting
+# ---------------------------------------------------------------------------
+def test_round_robin_cycles_free_engines(sched_for):
+    engines = [SimulatedEngine(f"s{i}", sched_for(14), max_batch=2)
+               for i in range(3)]
+    clock = {"t": 0.0}
+    orch = Orchestrator(engines, router="round-robin",
+                        now_fn=lambda: clock["t"])
+    for i in range(6):
+        orch.submit(SimRequest(rid=i), now=0.0)
+    for _ in range(3):  # three dispatches at t=0, one per engine in order
+        orch.step(now=0.0)
+    assert orch.dispatched == {"s0": 1, "s1": 1, "s2": 1}
+    assert all(d.reason == "round-robin" for d in orch.decisions)
+    _drain(orch, clock)
+    assert len(orch.completed) == 6 and orch.pending == 0
+
+
+def test_drain_flush_no_stranded_requests(sched_for):
+    """A heterogeneous 3-socket fleet under a burst of arrivals drains
+    completely: every request ends in completed/failed, hits + misses
+    cover them exactly, and the batch histogram admit-sum matches."""
+    engines = [
+        SimulatedEngine("socket-35MB", sched_for(14), max_batch=4,
+                        true_scale=1.0, jitter=0.05, seed=1),
+        SimulatedEngine("socket-17MB", sched_for(7), max_batch=4,
+                        true_scale=1.25, jitter=0.05, seed=2),
+        SimulatedEngine("socket-10MB", sched_for(4), max_batch=4,
+                        true_scale=1.6, jitter=0.05, seed=3),
+    ]
+    m = engines[0].latency_model.modeled_batch_s(1)
+    clock = {"t": 0.0}
+    orch = Orchestrator(engines, slo_ms=3 * m * 1e3,
+                        now_fn=lambda: clock["t"])
+    rng = np.random.default_rng(0)
+    times = np.sort(rng.uniform(0.0, 5 * m, size=40))
+    for i, t in enumerate(times):
+        clock["t"] = float(t)
+        orch.submit(SimRequest(rid=i), now=float(t))
+        orch.step(now=float(t))
+    _drain(orch, clock)
+    s = orch.stats()
+    assert s["completed"] + s["failed"] == 40 and orch.pending == 0
+    assert s["slo_hits"] + s["slo_misses"] == s["completed"] + s["failed"]
+    assert sum(n * c for n, c in s["batch_histogram"].items()) == 40
+    assert all(e.queue_depth == 0 for e in engines)
+    # every socket's internal ledger agrees with the fleet's
+    assert sum(len(e.completed) for e in engines) == s["completed"]
+    # with an SLO tight enough to pressure the fleet, the stats carry a
+    # well-formed hit rate
+    assert 0.0 <= s["slo_hit_rate"] <= 1.0
+    assert not math.isnan(s["slo_hit_rate"])
+
+
+# ---------------------------------------------------------------------------
+# Real engines behind the router: bit-identity + Engine contract
+# ---------------------------------------------------------------------------
+def test_real_fleet_routing_bit_identical_to_standalone():
+    """Two real NCServingEngine sockets (different geometries) behind the
+    latency router: all requests complete, the orchestrator-level SLO
+    identity holds, and every routed logit row is byte-identical to a
+    standalone nc_forward — the router changes placement, never
+    results."""
+    import jax
+
+    from repro.launch.serve import NCRequest, NCServingEngine
+
+    cfg = inception.reduced_config(img=47, width_div=8, classes=8, stages=())
+    params = inception.init_params(jax.random.PRNGKey(0), config=cfg)
+    clock = {"t": 0.0}
+    now = lambda: clock["t"]  # noqa: E731
+    engines = [
+        NCServingEngine(params, cfg, max_batch=2, now_fn=now,
+                        name="socket-35MB"),
+        NCServingEngine(params, cfg, max_batch=2, now_fn=now,
+                        name="socket-10MB",
+                        geom=XEON_E5_35MB.scaled(4, "xeon-10MB")),
+    ]
+    assert all(isinstance(e, Engine) for e in engines)
+    assert all(e.queue_depth == 0 and e.ready_in(0.0) == 0.0
+               for e in engines)
+    orch = Orchestrator(engines, slo_ms=1e7, now_fn=now)
+    rng = np.random.default_rng(0)
+    imgs = rng.random((5, cfg.img, cfg.img, 3)).astype(np.float32)
+    for i in range(5):
+        orch.submit(NCRequest(rid=i, image=imgs[i]))
+    done = orch.run()
+    assert len(done) == 5 and orch.pending == 0
+    s = orch.stats()
+    assert s["slo_hits"] + s["slo_misses"] == s["completed"] + s["failed"]
+    assert sum(s["dispatched"].values()) == sum(
+        s["batch_histogram"].values())
+    # requests keep their GLOBAL arrival stamp through dispatch
+    assert all(r.latency_s is not None and r.slo_ok is not None
+               for r in done)
+    for r in done:
+        ref, _ = inception.nc_forward(params, imgs[r.rid], config=cfg)
+        np.testing.assert_array_equal(r.logits, np.asarray(ref))

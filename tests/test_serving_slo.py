@@ -297,3 +297,145 @@ def test_simulate_network_const_keyword():
     a = simulate_network(sched)
     b = simulate_network(sched, const=SimConstants(mac8_cycles=300))
     assert b.latency_s > a.latency_s
+
+
+# ---------------------------------------------------------------------------
+# ArrivalRateEstimator + the fill-time-bounded hold (PR 9)
+# ---------------------------------------------------------------------------
+def test_arrival_estimator_unknown_until_two_arrivals():
+    import math
+    from repro.core.slo import ArrivalRateEstimator
+    est = ArrivalRateEstimator()
+    assert est.rate_hz is None and est.expected_fill_time_s(3) is None
+    est.observe(10.0)
+    # one arrival: still no interval, callers fall back to slack-only hold
+    assert est.rate_hz is None and est.expected_fill_time_s(3) is None
+    est.observe(12.0)
+    assert est.mean_interval_s == pytest.approx(2.0)
+    assert est.rate_hz == pytest.approx(0.5)
+    assert est.expected_fill_time_s(3) == pytest.approx(6.0)
+    assert est.expected_fill_time_s(0) == 0.0
+    assert not math.isnan(est.expected_fill_time_s(1))
+
+
+def test_arrival_estimator_ewma_tracks_rate_changes():
+    from repro.core.slo import ArrivalRateEstimator
+    est = ArrivalRateEstimator(ewma=0.5)
+    est.observe(0.0)
+    est.observe(4.0)   # interval 4
+    est.observe(6.0)   # interval 2: 0.5*2 + 0.5*4 = 3
+    assert est.mean_interval_s == pytest.approx(3.0)
+    # simultaneous arrivals drive the estimate toward zero, never negative
+    est.observe(6.0)
+    assert est.mean_interval_s == pytest.approx(1.5)
+    assert est.mean_interval_s >= 0.0
+
+
+def test_admission_empty_queue_budget_is_nan():
+    """An empty queue has no oldest request and therefore NO deadline
+    budget: admit() reports NaN, not a number pretending to be one."""
+    import math
+    pol = AdmissionPolicy(FakeLatency(1.0), slo_s=10.0, max_batch=8)
+    d = pol.admit(queued=0, oldest_wait_s=0.0)
+    assert d.admit == 0 and d.target == 0 and d.reason == "hold"
+    assert math.isnan(d.budget_s)
+
+
+def test_admission_hold_bounded_by_expected_fill_time():
+    """With an arrivals estimator, a shallow queue is held ONLY while the
+    target batch is expected to fill inside the remaining slack — sparse
+    traffic flushes ragged batches immediately (PR 5's open thread)."""
+    from repro.core.slo import ArrivalRateEstimator
+    est = ArrivalRateEstimator()
+    pol = AdmissionPolicy(FakeLatency(1.0), slo_s=10.0, max_batch=8,
+                          hold_slack_s=2.0, arrivals=est)
+    # unknown rate (one arrival): the slack-only rule holds as before
+    est.observe(0.0)
+    d = pol.admit(queued=2, oldest_wait_s=0.0)
+    assert d.reason == "hold"
+    # dense traffic (interval 0.1 s): filling 6 more takes ~0.6 s, well
+    # inside the 6 s slack -> keep holding
+    est.observe(0.1)
+    d = pol.admit(queued=2, oldest_wait_s=0.0)
+    assert d.reason == "hold"
+    # sparse traffic (interval ~100 s): the batch will never fill in
+    # time -> admit the ragged tail NOW while the deadline survives
+    sparse = ArrivalRateEstimator()
+    sparse.observe(0.0)
+    sparse.observe(100.0)
+    pol_sparse = AdmissionPolicy(FakeLatency(1.0), slo_s=10.0, max_batch=8,
+                                 hold_slack_s=2.0, arrivals=sparse)
+    d = pol_sparse.admit(queued=2, oldest_wait_s=0.0)
+    assert d.admit == 2 and d.reason == "ragged-early"
+
+
+def test_engine_submit_feeds_arrival_estimator(tiny):
+    from repro.launch.serve import NCRequest
+    cfg, params = tiny
+    clock = {"t": 0.0}
+    eng = _engine(cfg, params, clock, max_batch=4, slo_ms=1e7)
+    rng = np.random.default_rng(4)
+    img = rng.random((cfg.img, cfg.img, 3)).astype(np.float32)
+    eng.submit(NCRequest(rid=0, image=img))
+    clock["t"] = 2.0
+    eng.submit(NCRequest(rid=1, image=img))
+    assert eng.arrivals.samples == 2
+    assert eng.arrivals.mean_interval_s == pytest.approx(2.0)
+    assert eng.policy.arrivals is eng.arrivals
+
+
+def test_fail_requests_message_precedence():
+    """An exception with an empty str() falls back to the TYPE name —
+    (str(err) or type name), not str(err or type name)."""
+    from repro.launch.serve import BatchQueueEngine, NCRequest
+    eng = BatchQueueEngine()
+    reqs = [NCRequest(rid=0, image=np.zeros((1, 1, 3), np.float32))]
+    eng._fail_requests(reqs, ValueError())
+    assert eng.errors[-1] == "ValueError"
+    eng._fail_requests(reqs, ValueError("boom"))
+    assert eng.errors[-1] == "boom"
+    eng._fail_requests(reqs, "plain string")
+    assert eng.errors[-1] == "plain string"
+
+
+# ---------------------------------------------------------------------------
+# Rung-4 SLO accounting (PR 9 bugfix): a failed batch HAPPENED
+# ---------------------------------------------------------------------------
+def test_rung4_failed_batch_slo_accounting(tiny):
+    """A batch that exhausts the whole recovery ladder still waited and
+    still burned wall time: its requests are stamped SLO misses with a
+    latency, the batch lands in the histogram, and the wall is routed
+    through LatencyModel.exclude.  Identities:
+    slo_hits + slo_misses == completed + failed, and the histogram
+    admit-sum covers every finished request."""
+    import types
+    from repro.launch.serve import NCRequest
+    cfg, params = tiny
+    clock = {"t": 0.0}
+    eng = _engine(cfg, params, clock, max_batch=2, slo_ms=50.0)
+    rng = np.random.default_rng(5)
+    imgs = rng.random((3, cfg.img, cfg.img, 3)).astype(np.float32)
+    for r in range(3):
+        eng.submit(NCRequest(rid=r, image=imgs[r]))
+
+    def broken(x, schedule):
+        raise RuntimeError("emulation down")
+
+    eng._forward = broken
+    eng._inception = types.SimpleNamespace(
+        apply=lambda *a, **kw: (_ for _ in ()).throw(
+            RuntimeError("float down")))
+    done = eng.run()
+    assert done == [] and len(eng.failed) == 3 and not eng.queue
+    s = eng.stats()
+    # the fixed identity: every finished request is accounted exactly once
+    assert s["slo_hits"] + s["slo_misses"] == s["completed"] + s["failed"] == 3
+    assert s["slo_hits"] == 0 and s["slo_misses"] == 3
+    # failed batches happened: histogram covers them, totals match steps
+    assert sum(s["batch_histogram"].values()) == s["steps"] == eng.steps
+    assert sum(n * c for n, c in s["batch_histogram"].items()) == 3
+    # their walls never calibrate the model -- excluded, not observed
+    assert eng.latency_model.samples == 0
+    assert s["calibration_excluded"] == len(s["batch_histogram"]) == 2
+    for r in eng.failed:
+        assert r.slo_ok is False and r.latency_s is not None

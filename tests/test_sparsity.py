@@ -452,7 +452,7 @@ def test_nc_serving_engine_sparse_bit_exact():
 
 
 # ---------------------------------------------------------------------------
-# Compressed filter residency (ISSUE 8): CSR bit-plane store + plan flag
+# Compressed filter residency (PR 8): CSR bit-plane store + plan flag
 # ---------------------------------------------------------------------------
 @given(
     frac=st.sampled_from((0.0, 0.25, 0.5, 0.75, 1.0)),
@@ -582,7 +582,7 @@ def test_residency_credit_exact_per_layer_and_batch(reduced_specs):
 
 
 def test_stream_limit_and_spill_monotone_under_compression(reduced_specs):
-    """Property sweep (ISSUE 8 satellite): as residency shrinks (pruning
+    """Property sweep (PR 8 satellite): as residency shrinks (pruning
     0 -> 100%, compressed on/off), ``stream_batch_limit`` is monotone
     non-decreasing, never below the uncompressed plan's, and spill
     decisions never move (outputs are pruning- and compression-blind)."""

@@ -95,3 +95,36 @@ def test_serving_matches_unbatched_decode():
         ref.append(int(jnp.argmax(logits[0])))
         pos += 1
     assert out == ref
+
+
+def test_serving_mixed_prompt_lengths_match_sequential():
+    """PR 9 bugfix: slots admitted with DIFFERENT prompt lengths decode —
+    and write KV — each at its own position.  The old engine decoded
+    every slot at max(pos), so a short prompt batched next to a longer
+    one produced different (corrupted) tokens than it did served alone.
+    This test runs the same two prompts batched and sequentially and
+    demands identical outputs; it fails on the max(pos) code."""
+    from repro.launch.serve import Request, ServingEngine
+    from repro.models import transformer as T
+    import jax
+    cfg = reduced_config(get_config("olmo-1b"), n_layers=2, d_model=32,
+                         d_ff=64, vocab_size=64, head_dim=8)
+    params = T.init_lm(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(2, cfg.vocab_size, n).astype(np.int32)
+               for n in (3, 11)]  # mixed lengths share one decode batch
+
+    eng = ServingEngine(cfg, params, max_batch=2, max_len=32)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_tokens=5))
+    done = eng.run()
+    batched = {r.rid: r.out for r in done}
+    assert len(batched) == 2
+
+    for i, p in enumerate(prompts):
+        solo = ServingEngine(cfg, params, max_batch=1, max_len=32)
+        solo.submit(Request(rid=0, prompt=p, max_tokens=5))
+        ref = solo.run()[0].out
+        assert batched[i] == ref, (
+            f"prompt {i} (len {len(p)}) decoded differently batched vs "
+            f"alone: {batched[i]} vs {ref}")
