@@ -448,6 +448,91 @@ def _compressed_smoke_rows():
         "CSR bit-plane store, byte-identical to dense")]
 
 
+def _backend_rows():
+    """Backend-registry record pair (PR 10): the batch-4 pruned-50
+    reduced forward executed through the ``host`` and ``jit`` backends of
+    core/backends.py — the same workload twice, differing ONLY in the
+    ``engine=`` name.  GATES, raising like the sparsity/overlap gates:
+    logits must be byte-identical across backends (the conformance
+    contract of tests/test_backends.py at network scale) and both the
+    emulated and modeled cycle totals must be bit-identical (backends
+    re-time execution, never the model).  A third subsecond record times
+    the ``pallas-interpret`` adapter on one packed dot (gated on byte-
+    identity to host), so the interpret path's wall cost is tracked in
+    the same baseline.  Interleaved min-of-2 so shared-host noise
+    cancels; per-backend wall times are EXPECTED to differ — that is the
+    point of the records — only values and cycles are gated."""
+    import time
+
+    import jax as _jax
+    from repro.core import backends as nc_backends
+    from repro.core import bitserial as bs
+    from repro.core import nc_layers as nc
+    from repro.models import inception
+
+    cfg = inception.reduced_config()
+    params = inception.init_params(_jax.random.PRNGKey(0), config=cfg)
+    wpack = inception.prune_wpack(
+        inception.prepare_conv_weights(params, cfg), 0.5)
+    xb = np.asarray(_jax.random.uniform(
+        _jax.random.PRNGKey(1), (4, cfg.img, cfg.img, 3), jnp.float32))
+
+    walls = {"host": float("inf"), "jit": float("inf")}
+    logits: dict = {}
+    reports: dict = {}
+    for _ in range(2):
+        for name in ("host", "jit"):
+            t0 = time.perf_counter()
+            logits[name], reports[name] = inception.nc_forward(
+                params, xb, config=cfg, wpack=wpack, sparse=True,
+                engine=name)
+            walls[name] = min(walls[name], time.perf_counter() - t0)
+    if not np.array_equal(np.asarray(logits["host"]),
+                          np.asarray(logits["jit"])):
+        raise RuntimeError("backend gate: jit-backend nc_forward logits "
+                           "diverge from the host backend on the same "
+                           "pruned weights")
+    for field in ("total_emulated_cycles", "total_modeled_cycles"):
+        if getattr(reports["host"], field) != getattr(reports["jit"], field):
+            raise RuntimeError(
+                f"backend gate: {field} differs across backends — backends "
+                f"must re-time execution, never the cycle model")
+    shape = f"{cfg.img}px /4 widths, batch 4, 50% filters zero"
+    out = [
+        _rec(f"backend/{name}/nc_forward_b4_pruned50", walls[name] * 1e6,
+             shape,
+             f"{walls[name] / 4 * 1e3:.0f} ms/img via the {name} backend; "
+             f"logits and cycles gated identical across backends")
+        for name in ("host", "jit")
+    ]
+
+    # interpret-mode adapter: one packed dot, byte-identity gated, timed
+    # so the Pallas path's wall cost rides the same regression baseline
+    rng = np.random.default_rng(0)
+    xw = nc._pack_x_rows(
+        rng.integers(0, 256, size=(13, 144)).astype(np.uint32), 8)
+    ww = nc._pack_w_rows(
+        rng.integers(0, 256, size=(8, 144)).astype(np.uint32), 8)
+    ref, _ = bs.packed_dot_words(xw, ww, K=144, acc_bits=32, engine="host")
+    nc_backends.dispatch_stats_clear()
+    vals, _ = bs.packed_dot_words(xw, ww, K=144, acc_bits=32,
+                                  engine="pallas-interpret")
+    if not np.array_equal(np.asarray(vals), np.asarray(ref)):
+        raise RuntimeError("backend gate: pallas-interpret packed dot "
+                           "diverges from the host backend")
+    if nc_backends.dispatch_stats()["pallas-interpret"]["native"] != 1:
+        raise RuntimeError("backend gate: pallas-interpret delegated the "
+                           "in-envelope dot to host — the record would "
+                           "time the wrong body")
+    out.append(_timed_rec(
+        "backend/pallas-interpret/dot",
+        lambda: bs.packed_dot_words(xw, ww, K=144, acc_bits=32,
+                                    engine="pallas-interpret"), 3,
+        "13x144 . 8x144 word grids",
+        "interpret-mode Pallas GEMM, byte-identical to host"))
+    return out
+
+
 # checksum verification may not cost more than this multiple of the
 # unchecked conv wall/cycles on the _fault_rows workload — the recorded
 # bound the fault gate enforces (the modeled overhead is one extra lane
@@ -546,15 +631,17 @@ def run():
     out.extend(_emulation_rows())
     out.extend(_fault_rows())
     out.extend(_compressed_smoke_rows())
+    out.extend(_backend_rows())
     return out
 
 
 def run_quick():
-    """``kernel/*`` + fault-gate + compressed-smoke records — subsecond;
-    ``benchmarks.run --quick``."""
+    """``kernel/*`` + fault-gate + compressed-smoke + cross-backend
+    records; ``benchmarks.run --quick``."""
     RECORDS.clear()
     RETIMERS.clear()
     out = _kernel_rows()
     out.extend(_fault_rows())
     out.extend(_compressed_smoke_rows())
+    out.extend(_backend_rows())
     return out

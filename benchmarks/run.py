@@ -21,10 +21,12 @@ the refreshed baseline both carry a host fingerprint (cpu count,
 platform, jax/jaxlib versions) so recorded wall times keep their
 provenance.
 
-Slow-test gate: tier-1 (`pytest -x -q`) deselects the ``slow``-marked
-end-to-end reduced-Inception and serving tests (pytest.ini); this harness
-runs them (`pytest -m slow`) after the benches so they stay exercised.
-Set ``BENCH_SKIP_SLOW=1`` to skip the gate."""
+Slow-test gate: tier-1 (`pytest -x -q`) deselects the ``slow``-,
+``faults``- and ``backends``-marked tests (pytest.ini) — the end-to-end
+reduced-Inception/serving runs, the fault-injection sweeps, and the
+interpret-mode backend conformance sweeps; this harness runs them
+(`pytest -m "slow or faults or backends"`) after the benches so they
+stay exercised.  Set ``BENCH_SKIP_SLOW=1`` to skip the gate."""
 from __future__ import annotations
 
 import importlib
@@ -225,13 +227,14 @@ def _dump_kernel_records(ok: set | None = None) -> None:
 
 
 def _run_slow_gate() -> bool:
-    """Exercise the `slow`- and `faults`-marked tests tier-1 deselects."""
+    """Exercise the `slow`-, `faults`- and `backends`-marked tests tier-1
+    deselects."""
     if os.environ.get("BENCH_SKIP_SLOW"):
         print("# slow-test gate skipped (BENCH_SKIP_SLOW)", file=sys.stderr)
         return True
     repo = pathlib.Path(__file__).resolve().parent.parent
-    cmd = [sys.executable, "-m", "pytest", "-q", "-m", "slow or faults",
-           "-o", "addopts=", "tests"]
+    cmd = [sys.executable, "-m", "pytest", "-q", "-m",
+           "slow or faults or backends", "-o", "addopts=", "tests"]
     print(f"# slow-test gate: {' '.join(cmd[2:])}", file=sys.stderr)
     res = subprocess.run(cmd, cwd=repo)
     return res.returncode in (0, 5)  # 5: no slow tests collected

@@ -1,0 +1,314 @@
+"""Backend registry for the packed bit-serial hot path (PR 10).
+
+Three execution bodies exist for the packed MAC+reduce that
+``bitserial.packed_dot_words`` exposes: the exact numpy host walk, the
+bucketed-jit decoded-lane kernel, and the Pallas bit-serial GEMM
+(``kernels/bitserial_matmul.py`` — previously only reachable as a
+standalone matmul).  This module makes the choice explicit: ONE registry
+of :class:`Backend` entries, looked up by name everywhere an
+``engine=`` string used to be interpreted ad hoc.
+
+Contract
+--------
+
+* **Backends re-time execution, never the model.**  A backend's
+  ``dot_words`` returns VALUES only; modeled cycles are charged by
+  ``bitserial.packed_dot_words`` from the unchanged §III formula
+  (``bitserial.dot_cycles``) before dispatch, so cycle counts are
+  bit-identical across backends *by construction*.
+* **Byte-identity.**  Every registered backend must reproduce the host
+  reference exactly (tests/test_backends.py runs the differential
+  conformance harness over the full operating envelope).  A backend may
+  delegate inputs outside its native envelope (capability flags below)
+  to the host body — delegation is counted in :func:`dispatch_stats` so
+  tests can assert the native path actually ran.
+* **Selection is configuration.**  Precedence at every call site:
+  explicit ``engine=`` argument > the plan's ``backend`` field
+  (``schedule.plan_layer(backend=...)`` — the same plan-decision idiom
+  as sparsity/overlap/integrity/compression) > the ``NC_BACKEND``
+  environment variable > the caller's default.  An explicit engine
+  that *contradicts* a backend-carrying plan raises (ambiguous).
+
+Registered backends
+-------------------
+
+``host``
+    The exact numpy bit-serial walk (``bitserial._dot_words_impl``) —
+    the reference every other backend is checked against.  Handles any
+    plane width, accumulator width and row layout; zero-operand word
+    skipping (``bitserial.ZERO_SKIP``) lives here.
+``jit``
+    Bucketed compiled decoded-lane kernel: one XLA executable per
+    (x planes, w planes, acc, K) bucket (``bitserial.engine_cache_info``
+    reports the cache).  Falls back to host when the int32 decode could
+    overflow.
+``pallas-interpret``
+    The byte-packed Pallas bit-serial GEMM (in-kernel shift+mask plane
+    unpack, zero-plane-block skip; the W4A4 nibble kernel when both
+    operands fit 4 planes) run through the Pallas interpreter on CPU.
+    A real-TPU deployment is the SAME adapter with ``interpret=False``
+    — ``kernels/ops.py`` flips that off ``ops.on_tpu()`` — registered
+    as one new entry plus one bench refresh.  Inputs outside its native
+    envelope (traced operands, rows sharing words — ``K <= 16`` —,
+    > 8 planes, int32-overflow risk, non-separable broadcast grids,
+    oversized tiles) delegate to host, exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Callable
+
+import numpy as np
+
+from repro.core import bitserial as bs
+
+__all__ = [
+    "Backend",
+    "ENV_VAR",
+    "register_backend",
+    "registered_backends",
+    "get_backend",
+    "env_backend",
+    "default_backend",
+    "resolve_backend",
+    "dispatch_stats",
+    "dispatch_stats_clear",
+]
+
+ENV_VAR = "NC_BACKEND"
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """One registered execution body for the packed bit-serial dot.
+
+    The capability flags describe the *native* envelope; inputs outside
+    it are delegated to the host body (still byte-exact — see the module
+    contract).  ``dot_words(xw, ww, *, K, acc_bits, materialize)``
+    returns the integer row values only; cycles are charged by the
+    caller (``bitserial.packed_dot_words``) so backends cannot perturb
+    the cycle model."""
+
+    name: str
+    # accumulator widths executed natively (None = any)
+    acc_bits: tuple[int, ...] | None
+    w4a4: bool  # dedicated nibble-packed path for <=4-plane operands
+    compressed_planes: bool  # consumes CSR-reconstructed filter tiles
+    integrity: bool  # safe under the ABFT checked/fault-injected path
+    # cap on one operand's word-grid size (None = unbounded)
+    max_lane_words: int | None
+    dot_words: Callable[..., np.ndarray]
+
+    def supports_acc(self, acc_bits: int) -> bool:
+        return self.acc_bits is None or acc_bits in self.acc_bits
+
+
+_REGISTRY: dict[str, Backend] = {}
+# per-backend dispatch counters: name -> [native, fallback-to-host]
+_DISPATCH: dict[str, list[int]] = {}
+
+
+def register_backend(backend: Backend) -> Backend:
+    _REGISTRY[backend.name] = backend
+    _DISPATCH.setdefault(backend.name, [0, 0])
+    return backend
+
+
+def registered_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_backend(name: str, source: str = "engine") -> Backend:
+    """Look up a backend by name; unknown names raise a :class:`ValueError`
+    that names every registered backend (the one error surfaced for a bad
+    ``engine=`` string and a bad ``NC_BACKEND`` alike)."""
+    backend = _REGISTRY.get(name)
+    if backend is None:
+        raise ValueError(
+            f"unknown backend {name!r} (from {source}); registered "
+            f"backends: {', '.join(registered_backends())}")
+    return backend
+
+
+def env_backend() -> str | None:
+    """The ``NC_BACKEND`` environment selection, validated, or None when
+    unset/empty."""
+    name = os.environ.get(ENV_VAR)
+    if not name:
+        return None
+    return get_backend(name, source=f"{ENV_VAR} environment variable").name
+
+
+def default_backend() -> str:
+    """``NC_BACKEND`` when set (validated), else the host reference."""
+    return env_backend() or "host"
+
+
+def resolve_backend(explicit: str | None = None,
+                    plan_backend: str | None = None,
+                    default: str | None = None) -> str:
+    """Resolve the backend name by the standing precedence: explicit
+    ``engine=`` > plan's ``backend`` field > ``NC_BACKEND`` > ``default``
+    (the host reference when no default is given).  Callers raise on the
+    ambiguous explicit-vs-plan combination *before* resolving; here an
+    explicit name simply wins (they are checked equal upstream)."""
+    if explicit is not None:
+        return get_backend(explicit).name
+    if plan_backend is not None:
+        return get_backend(plan_backend, source="plan backend").name
+    return env_backend() or (default if default is not None else "host")
+
+
+def dispatch_stats() -> dict[str, dict[str, int]]:
+    """Per-backend dispatch counters since the last clear:
+    ``{name: {"native": n, "fallback": m}}`` — ``fallback`` counts calls
+    delegated to the host body (inputs outside the native envelope)."""
+    return {name: {"native": c[0], "fallback": c[1]}
+            for name, c in _DISPATCH.items()}
+
+
+def dispatch_stats_clear() -> None:
+    for c in _DISPATCH.values():
+        c[0] = c[1] = 0
+
+
+def _note(name: str, native: bool) -> None:
+    _DISPATCH[name][0 if native else 1] += 1
+
+
+# ---------------------------------------------------------------------------
+# host — the exact reference body
+# ---------------------------------------------------------------------------
+def _host_dot_words(xw, ww, *, K: int, acc_bits: int,
+                    materialize: bool = True):
+    _note("host", native=True)
+    return bs._dot_words_impl(xw, ww, K=K, acc_bits=acc_bits)
+
+
+# ---------------------------------------------------------------------------
+# jit — bucketed compiled decoded-lane kernel (cache lives in bitserial so
+# engine_cache_info/engine_cache_clear keep reporting it)
+# ---------------------------------------------------------------------------
+def _jit_dot_words(xw, ww, *, K: int, acc_bits: int, materialize: bool = True):
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    if bs._is_traced(xw, ww):
+        _note("jit", native=False)
+        return bs._dot_words_impl(xw, ww, K=K, acc_bits=acc_bits)
+    max_sum = K * ((1 << xw.shape[0]) - 1) * ((1 << ww.shape[0]) - 1)
+    if max_sum >= (1 << 31) and not jax.config.jax_enable_x64:
+        # the traced decode saturates at int32 — stay exact on host
+        _note("jit", native=False)
+        return bs._dot_words_impl(xw, ww, K=K, acc_bits=acc_bits)
+    key = (int(xw.shape[0]), int(ww.shape[0]), acc_bits, K)
+    fn = bs._ENGINE_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(functools.partial(bs._dot_words_decoded, K=K,
+                                       acc_bits=acc_bits))
+        bs._ENGINE_CACHE[key] = fn
+    _note("jit", native=True)
+    out = fn(jnp.asarray(xw), jnp.asarray(ww))
+    return np.asarray(out) if materialize else out
+
+
+# ---------------------------------------------------------------------------
+# pallas-interpret — the byte-packed Pallas GEMM as a word-grid adapter
+# ---------------------------------------------------------------------------
+def _decode_rows(words: np.ndarray, K: int) -> np.ndarray:
+    """Row-aligned word grid ``(n, *grid, wpr)`` -> ``(*grid, K)`` int64
+    lane values (P >= 32 layouts only: one row per grid element)."""
+    n = words.shape[0]
+    bits = bs._unpack_bits32_np(words)  # (n, *grid, wpr, 32)
+    weights = (np.int64(1) << np.arange(n, dtype=np.int64)).reshape(
+        (n,) + (1,) * (bits.ndim - 1))
+    vals = (bits.astype(np.int64) * weights).sum(axis=0)  # (*grid, wpr, 32)
+    return vals.reshape(vals.shape[:-2] + (-1,))[..., :K]
+
+
+def _pallas_fallback_reason(xw, ww, *, K: int, acc_bits: int,
+                            backend: Backend) -> str | None:
+    import jax
+
+    if bs._is_traced(xw, ww):
+        return "traced operands"
+    nx, nw = int(xw.shape[0]), int(ww.shape[0])
+    if nx > 8 or nw > 8:
+        return "more than 8 bit planes"
+    if not backend.supports_acc(acc_bits):
+        return f"acc_bits={acc_bits} outside {backend.acc_bits}"
+    P, _, r = bs._row_layout(K)
+    if r != 1:
+        return "rows share words (K <= 16)"
+    max_sum = K * ((1 << nx) - 1) * ((1 << nw) - 1)
+    if max_sum >= (1 << 31) and not jax.config.jax_enable_x64:
+        return "int32 accumulator overflow"
+    cap = backend.max_lane_words
+    if cap is not None and max(xw.size, ww.size) > cap:
+        return "operand grid exceeds max_lane_words"
+    gx, gw = xw.shape[1:-1], ww.shape[1:-1]
+    if len(gx) != len(gw):
+        return "grid ranks differ"
+    if any(a > 1 and b > 1 for a, b in zip(gx, gw)):
+        return "non-separable broadcast grids"
+    return None
+
+
+def _pallas_dot_words(xw, ww, *, K: int, acc_bits: int,
+                      materialize: bool = True):
+    """Adapter: decode the two row-aligned word grids to integer row
+    matrices, run the byte-packed Pallas kernel (interpret mode off-TPU;
+    the W4A4 nibble kernel when both operands fit 4 planes), and scatter
+    the exact int32 accumulator back into the broadcast grid."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    from repro.kernels import ref as kref
+
+    backend = _REGISTRY["pallas-interpret"]
+    reason = _pallas_fallback_reason(xw, ww, K=K, acc_bits=acc_bits,
+                                     backend=backend)
+    if reason is not None:
+        _note("pallas-interpret", native=False)
+        return bs._dot_words_impl(xw, ww, K=K, acc_bits=acc_bits)
+    _note("pallas-interpret", native=True)
+
+    nx, nw = int(xw.shape[0]), int(ww.shape[0])
+    gx, gw = xw.shape[1:-1], ww.shape[1:-1]
+    X = _decode_rows(np.asarray(xw), K).reshape(-1, K)  # [Rx, K]
+    W = _decode_rows(np.asarray(ww), K).reshape(-1, K)  # [Rw, K]
+
+    w4a4 = backend.w4a4 and nx <= 4 and nw <= 4 and K >= 2
+    planes = kref.pack_bitplanes_bytes(jnp.asarray(W.T, jnp.int32), nw)
+    if w4a4:
+        x_nib = kref.pack_activation_nibbles(jnp.asarray(X, jnp.int8))
+        out = ops.bitserial_matmul_exact(x_nib, planes, n_bits=nw,
+                                         w4a4=True)
+    else:
+        out = ops.bitserial_matmul_exact(jnp.asarray(X, jnp.int32), planes,
+                                         n_bits=nw)
+    O = np.asarray(out, np.int64)  # [Rx, Rw] exact int32 accumulator
+
+    # scatter back into the broadcast grid: each grid axis is owned by at
+    # most one operand (separability checked above), so interleaving the
+    # (gx_i, gw_i) axis pairs and merging each pair (one side is 1)
+    # reproduces np.broadcast_shapes(gx, gw)
+    n_axes = len(gx)
+    O = O.reshape(tuple(gx) + tuple(gw))
+    O = O.transpose([a for i in range(n_axes) for a in (i, n_axes + i)])
+    return O.reshape(np.broadcast_shapes(gx, gw))
+
+
+register_backend(Backend(
+    name="host", acc_bits=None, w4a4=True, compressed_planes=True,
+    integrity=True, max_lane_words=None, dot_words=_host_dot_words))
+register_backend(Backend(
+    name="jit", acc_bits=None, w4a4=True, compressed_planes=True,
+    integrity=True, max_lane_words=None, dot_words=_jit_dot_words))
+register_backend(Backend(
+    name="pallas-interpret", acc_bits=(24, 32), w4a4=True,
+    compressed_planes=True, integrity=True, max_lane_words=1 << 22,
+    dot_words=_pallas_dot_words))

@@ -73,6 +73,13 @@ ragged last one) replays the same compiled executable instead of
 recompiling per lane shape.  ``engine_cache_info()`` reports the cache
 contents.
 
+The ``engine=`` string names an entry in the explicit backend registry
+(core/backends.py — ``host``, ``jit``, ``pallas-interpret``; an unknown
+name raises listing the registered set, ``None`` resolves through the
+``NC_BACKEND`` environment variable).  Backends return values only;
+:func:`packed_dot_words` charges :func:`dot_cycles` before dispatch, so
+modeled cycles are bit-identical across backends by construction.
+
 Beyond-paper zero-operand skipping (EIE-style): the host multiply drops
 word columns whose 32 lanes all have a zero operand (the product lanes
 are provably zero, exactly what the tag latch would predicate off);
@@ -100,7 +107,6 @@ core/simulator.py.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import sys
 
 import jax
@@ -1287,7 +1293,8 @@ def _dot_words_decoded(xw, ww, *, K: int, acc_bits: int):
     return s.reshape(prod.shape[:-2] + (prod.shape[-2] * r,))
 
 
-def packed_dot_words(xw, ww, *, K: int, acc_bits: int, engine: str = "host",
+def packed_dot_words(xw, ww, *, K: int, acc_bits: int,
+                     engine: str | None = "host",
                      materialize: bool = True):
     """Fused row-aligned dot: ``sum_k x[row, k] * w[row, k]`` per row.
 
@@ -1300,44 +1307,38 @@ def packed_dot_words(xw, ww, *, K: int, acc_bits: int, engine: str = "host",
 
     Returns ``(values int64, cycles_per_row)`` where cycles follow the
     unchanged per-dot formula :func:`dot_cycles` — one MAC into an
-    ``acc_bits`` partial sum plus the §III-D log tree.
+    ``acc_bits`` partial sum plus the §III-D log tree.  Cycles are
+    charged HERE, before dispatch, so no backend can perturb the cycle
+    model (they re-time execution only).
 
-    ``engine="jit"`` dispatches to a bucketed compiled kernel
-    (:func:`_dot_words_decoded` — decoded integer lanes, bit-exact with
-    the bit-serial walk): callers pad their tile's grid axes to
-    :func:`bucket_words` sizes (zero rows decode to zero and slice off —
-    the conv tiler in core/nc_layers.py does this for every tile, ragged
-    tails included) so tiles replay one cached executable per
-    (planes, acc, K) key and grid bucket.  The exact host path is used
-    instead when the int32 decode could overflow (operand widths and K
-    such that the maximum row sum reaches 2^31 without
-    ``jax_enable_x64``).
+    ``engine`` names a registered backend (core/backends.py): ``"host"``
+    is this module's exact numpy walk, ``"jit"`` the bucketed compiled
+    decoded-lane kernel (one executable per (planes, acc, K) bucket —
+    callers pad their tile grids to :func:`bucket_words` sizes so ragged
+    tails replay the cached executable; :func:`engine_cache_info` reports
+    the cache), ``"pallas-interpret"`` the byte-packed Pallas bit-serial
+    GEMM.  ``engine=None`` resolves through the ``NC_BACKEND``
+    environment variable (default host); an unknown name raises a
+    :class:`ValueError` listing the registered backends.
 
     ``materialize=False`` skips the blocking device->host copy on the jit
     path and returns the dispatched device array instead: XLA's
     asynchronous dispatch lets the caller keep packing the NEXT tile's
     operands while this tile computes — the §IV-E double-buffered engine
     in core/nc_layers.py defers ``np.asarray`` by one tile.  Values are
-    identical either way; the host path (and the int32-overflow fallback)
-    is synchronous, so the flag only changes WHEN the copy happens, never
-    what it holds.
+    identical either way; synchronous backends only change WHEN the copy
+    happens, never what it holds.
     """
+    from repro.core import backends as _backends
+
+    if engine is None:
+        engine = _backends.default_backend()
+    backend = _backends.get_backend(engine)
     n_bits = max(xw.shape[0], ww.shape[0])
     cycles = dot_cycles(K, n_bits, acc_bits)
-    if engine == "jit" and not _is_traced(xw, ww):
-        max_sum = K * ((1 << xw.shape[0]) - 1) * ((1 << ww.shape[0]) - 1)
-        if max_sum >= (1 << 31) and not jax.config.jax_enable_x64:
-            # the traced decode saturates at int32 — stay exact on host
-            return _dot_words_impl(xw, ww, K=K, acc_bits=acc_bits), cycles
-        key = (int(xw.shape[0]), int(ww.shape[0]), acc_bits, K)
-        fn = _ENGINE_CACHE.get(key)
-        if fn is None:
-            fn = jax.jit(functools.partial(_dot_words_decoded, K=K,
-                                           acc_bits=acc_bits))
-            _ENGINE_CACHE[key] = fn
-        out = fn(jnp.asarray(xw), jnp.asarray(ww))
-        return (np.asarray(out) if materialize else out), cycles
-    return _dot_words_impl(xw, ww, K=K, acc_bits=acc_bits), cycles
+    vals = backend.dot_words(xw, ww, K=K, acc_bits=acc_bits,
+                             materialize=materialize)
+    return vals, cycles
 
 
 def _resize_planes(planes, n: int):

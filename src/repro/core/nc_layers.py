@@ -58,6 +58,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import backends as _backends
 from repro.core import bitserial as bs
 from repro.core import faults
 from repro.core import quantize as q
@@ -250,7 +251,7 @@ def nc_conv2d(
     layer_spec: LayerSpec | None = None,
     plan: sched.SlicePlan | None = None,
     occupancy: sched.LayerOccupancy | str | None = None,
-    engine: str = "host",
+    engine: str | None = None,
     overlap: bool = False,
     integrity: bool = False,
     compressed: bool = False,
@@ -281,10 +282,16 @@ def nc_conv2d(
     or batching: each lane group reports the same ``per_dot_cycles`` as
     the untiled single-image formulation.
 
-    ``engine="jit"`` runs tiles through the bucketed compiled engine
-    (tiles are padded to a uniform shape so one executable serves the
-    whole layer); ``return_stats=True`` appends a :class:`ConvStats` with
-    the EIE-style zero-operand skip counts.
+    ``engine`` names a registered backend (``core/backends.py``:
+    ``host``, ``jit``, ``pallas-interpret``, ...); ``None`` resolves by
+    the standing precedence explicit ``engine=`` > the plan's
+    ``backend`` field (``plan_layer(..., backend=...)``) > the
+    ``NC_BACKEND`` environment variable > host.  An explicit engine that
+    contradicts a backend-carrying plan raises (the plan already
+    decided).  ``engine="jit"`` runs tiles through the bucketed compiled
+    engine (tiles are padded to a uniform shape so one executable serves
+    the whole layer); ``return_stats=True`` appends a :class:`ConvStats`
+    with the EIE-style zero-operand skip counts.
 
     Sparsity-aware execution: a plan carrying a
     :class:`~repro.core.schedule.LayerOccupancy` executes the PRUNED pass
@@ -394,6 +401,12 @@ def nc_conv2d(
         raise ValueError("request compression through the plan "
                          "(plan_layer(..., compressed=True)); compressed= "
                          "with an explicit plan is ambiguous")
+    if (engine is not None and plan is not None
+            and plan.backend not in (None, engine)):
+        raise ValueError("pick the backend through the plan "
+                         "(plan_layer(..., backend=...)); engine= "
+                         "contradicting a backend-carrying plan is "
+                         "ambiguous")
     if replan:
         occ = occupancy
         if isinstance(occ, str):
@@ -403,18 +416,23 @@ def nc_conv2d(
             occ = sched.LayerOccupancy.from_filter_rows(
                 w_rows, w_qp.bits, zw_int)
         quarantined: tuple = ()
+        backend_pin: str | None = None
         if plan is not None:
             if occ is None:
                 occ = plan.occupancy  # tile overrides must not drop sparsity
             overlap = overlap or plan.overlap  # ... nor drop double buffering
             integrity = integrity or plan.integrity  # ... nor drop checking
             compressed = compressed or plan.compressed  # ... nor decompress
+            backend_pin = plan.backend  # ... nor drop the backend pin
             quarantined = plan.quarantined_slices
         plan = sched.plan_layer(spec, geom, batch=B, tile_pixels=tile_pixels,
                                 tile_filters=tile_filters, occupancy=occ,
                                 overlap=overlap, integrity=integrity,
                                 quarantined_slices=quarantined,
-                                compressed=compressed)
+                                compressed=compressed, backend=backend_pin)
+    # backend selection is pure configuration: explicit engine= > the
+    # plan's pin > NC_BACKEND > host (contradictions raised above)
+    engine = _backends.resolve_backend(engine, plan.backend)
     tile_rows = max(1, min(plan.tile_rows, rows_total))
     tile_filters = max(1, min(plan.tile_filters, M))
 

@@ -290,6 +290,12 @@ class SlicePlan:
     # (same invariant idiom as occupancy/overlap/integrity above).
     compressed: bool = False
     dense_filter_bytes: int = 0  # uncompressed live-set residency (credit ref)
+    # PR 10 backend pin: the registered execution backend
+    # (core/backends.py) the engine must run this plan's tiles through;
+    # None leaves the choice to the call site / NC_BACKEND environment.
+    # Backends re-time execution only — every field above, and every
+    # modeled cycle derived from them, is backend-independent.
+    backend: str | None = None
 
     @property
     def is_compute(self) -> bool:
@@ -340,7 +346,8 @@ def plan_layer(spec: LayerSpec,
                overlap: bool = False,
                integrity: bool = False,
                quarantined_slices: Sequence[int] = (),
-               compressed: bool = False) -> SlicePlan:
+               compressed: bool = False,
+               backend: str | None = None) -> SlicePlan:
     """Map one layer (§IV-A/B) and schedule it for ``batch`` images.
 
     ``occupancy`` makes value sparsity an input to the plan: passes whose
@@ -392,7 +399,20 @@ def plan_layer(spec: LayerSpec,
     check) derives from the compressed bytes through the SAME
     ``mapper.pass_filter_bytes`` rule, so streaming, overlap legality and
     pricing all shrink consistently.  ``compressed=False`` plans are
-    field-for-field identical to uncompressed ones."""
+    field-for-field identical to uncompressed ones.
+
+    ``backend`` pins the execution backend (PR 10): a name from the
+    registry in ``core/backends.py`` (validated here — an unknown name
+    raises listing the registered set) that the packed engine must run
+    this plan's tiles through.  Like every other plan decision it rides
+    the plan to the call site: ``nc_conv2d``/``nc_fc`` adopt it when no
+    explicit ``engine=`` is given, and an explicit engine that
+    contradicts it raises.  Backends never change a plan's numbers —
+    every other field is backend-independent."""
+    if backend is not None:
+        from repro.core import backends as _backends
+        backend = _backends.get_backend(backend,
+                                        source="plan_layer(backend=)").name
     mapped = map_layer(spec, geom)
     E = F = spec.E
     skipped = 0
@@ -495,6 +515,7 @@ def plan_layer(spec: LayerSpec,
         quarantined_slices=quarantined,
         compressed=compressed,
         dense_filter_bytes=dense_resident,
+        backend=backend,
     )
 
 
@@ -517,6 +538,7 @@ class NetworkSchedule:
     overlap: bool = False  # §IV-E double buffering requested for the net
     integrity: bool = False  # PR 7 checksum verification requested
     compressed: bool = False  # PR 8 CSR bit-plane filter residency
+    backend: str | None = None  # PR 10 execution backend pin (registry name)
 
     def plan(self, name: str) -> SlicePlan:
         for p in self.layers:
@@ -606,6 +628,7 @@ def plan_network(specs: Sequence[LayerSpec] | Iterable[LayerSpec],
                  integrity: bool = False,
                  quarantined_slices: Sequence[int] = (),
                  compressed: bool = False,
+                 backend: str | None = None,
                  ) -> NetworkSchedule:
     """Plan a network.  ``occupancy`` maps layer names to their
     :class:`LayerOccupancy` (layers absent from the map plan dense);
@@ -615,15 +638,22 @@ def plan_network(specs: Sequence[LayerSpec] | Iterable[LayerSpec],
     ``quarantined_slices`` re-serializes every layer over the surviving
     slice pool, and ``compressed`` stores every compute layer's filters
     CSR-style per bit plane (PR 8 — residency, streaming and the
-    batch ceiling all shrink/raise together)."""
+    batch ceiling all shrink/raise together).  ``backend`` pins every
+    layer's execution backend to one registered name (PR 10,
+    core/backends.py) — a pure config change: consumers adopt
+    ``schedule.backend`` with zero call-site edits."""
     occupancy = occupancy or {}
+    if backend is not None:
+        from repro.core import backends as _backends
+        backend = _backends.get_backend(backend,
+                                        source="plan_network(backend=)").name
     return NetworkSchedule(
         tuple(plan_layer(s, geom, batch, occupancy=occupancy.get(s.name),
                          overlap=overlap, integrity=integrity,
                          quarantined_slices=quarantined_slices,
-                         compressed=compressed)
+                         compressed=compressed, backend=backend)
               for s in specs), geom, batch, overlap, bool(integrity),
-        bool(compressed))
+        bool(compressed), backend)
 
 
 def prune_occupancy(specs: Iterable[LayerSpec], fraction: float = 0.5,

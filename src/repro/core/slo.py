@@ -176,6 +176,18 @@ class LatencyModel:
         the retired plan)."""
         self._results.clear()
 
+    def reset_calibration(self) -> None:
+        """Forget every measured wall/modeled observation — call when the
+        execution BACKEND changes (PR 10, ``NCServingEngine.set_engine``).
+        The wall-clock-per-modeled-cycle scale is a property of the
+        execution body (host walk vs bucketed jit vs Pallas interpret),
+        so observations from one backend must not price another; modeled
+        cycles themselves are backend-invariant and the priced-plan memo
+        is handled separately by :meth:`invalidate_plans`."""
+        self.scale = 1.0
+        self.samples = 0
+        self._recent.clear()
+
     def modeled_batch_s(self, batch: int) -> float:
         """Modeled time to run one admitted batch: filter load once +
         ``batch`` x (marginal + spill) — ``simulator.batch_time_s``."""

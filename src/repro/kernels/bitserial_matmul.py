@@ -51,15 +51,36 @@ DEFAULT_BN = 128
 DEFAULT_BK = 256
 
 
+def _plane_w(n_bits: int, signed: bool) -> jax.Array:
+    """Per-plane scales: two's complement (MSB negative) for the signed
+    quantized-GEMM convention, plain powers of two for the UNSIGNED
+    operands of the packed word engine (core/backends.py adapter)."""
+    if signed:
+        return plane_weights(n_bits)
+    return 2 ** jnp.arange(n_bits, dtype=jnp.int32)
+
+
+def _store_out(o_ref, acc_ref, xs_ref, ws_ref):
+    """Scale/dequant epilogue.  Integer out dtypes take the EXACT int32
+    accumulator (scales must be 1 — the backend-registry conformance
+    path, where a float32 round-trip would lose bits above 2^24)."""
+    if jnp.issubdtype(o_ref.dtype, jnp.integer):
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+    else:
+        out = acc_ref[...].astype(jnp.float32)
+        out = out * xs_ref[0] * ws_ref[...][None, :]
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
 def _kernel(x_ref, p_ref, mask_ref, xs_ref, ws_ref, o_ref, acc_ref, *, n_k: int,
-            n_bits: int):
+            n_bits: int, signed: bool = True):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    pw = plane_weights(n_bits)
+    pw = _plane_w(n_bits, signed)
     packed = p_ref[...].astype(jnp.int32)  # (bk, bn) bytes: all planes
     for b in range(n_bits):  # bit-serial: one plane per MXU pass
         @pl.when(mask_ref[b, 0, 0] != 0)  # zero-plane skip (beyond-paper)
@@ -73,23 +94,25 @@ def _kernel(x_ref, p_ref, mask_ref, xs_ref, ws_ref, o_ref, acc_ref, *, n_k: int,
 
     @pl.when(k == n_k - 1)
     def _epilogue():
-        out = acc_ref[...].astype(jnp.float32)
-        out = out * xs_ref[0] * ws_ref[...][None, :]
-        o_ref[...] = out.astype(o_ref.dtype)
+        _store_out(o_ref, acc_ref, xs_ref, ws_ref)
 
 
 def _kernel_a4(x_ref, p_ref, mask_ref, xs_ref, ws_ref, o_ref, acc_ref, *,
-               n_k: int, n_bits: int):
+               n_k: int, n_bits: int, signed: bool = True):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    pw = plane_weights(n_bits)
+    pw = _plane_w(n_bits, signed)
     xb = x_ref[...].astype(jnp.int32)  # (bm, bk2) bytes: 2 elements each
-    xe = ((xb & 0xF) ^ 8) - 8  # in-kernel unpack + 4-bit sign extend
-    xo = ((xb >> 4) ^ 8) - 8
+    if signed:
+        xe = ((xb & 0xF) ^ 8) - 8  # in-kernel unpack + 4-bit sign extend
+        xo = ((xb >> 4) ^ 8) - 8
+    else:
+        xe = xb & 0xF  # unsigned nibbles: plain shift+mask unpack
+        xo = xb >> 4
     packed = p_ref[...].astype(jnp.int32)  # (2*bk2, bn) bytes: all planes
     we = packed[0::2]  # even K rows pair with the low nibbles
     wo = packed[1::2]
@@ -104,9 +127,7 @@ def _kernel_a4(x_ref, p_ref, mask_ref, xs_ref, ws_ref, o_ref, acc_ref, *,
 
     @pl.when(k == n_k - 1)
     def _epilogue():
-        out = acc_ref[...].astype(jnp.float32)
-        out = out * xs_ref[0] * ws_ref[...][None, :]
-        o_ref[...] = out.astype(o_ref.dtype)
+        _store_out(o_ref, acc_ref, xs_ref, ws_ref)
 
 
 def plane_block_mask(planes: jax.Array, bk: int, bn: int) -> jax.Array:
@@ -122,7 +143,7 @@ def plane_block_mask(planes: jax.Array, bk: int, bn: int) -> jax.Array:
 
 @functools.partial(
     jax.jit, static_argnames=("n_bits", "bm", "bn", "bk", "out_dtype",
-                              "interpret")
+                              "interpret", "signed")
 )
 def bitserial_matmul(
     x_q: jax.Array,  # [M, K] int8 activations
@@ -137,6 +158,7 @@ def bitserial_matmul(
     bk: int = DEFAULT_BK,
     out_dtype=jnp.float32,
     interpret: bool = True,
+    signed: bool = True,  # False: unsigned planes (MSB weight +2^(n-1))
 ) -> jax.Array:
     if planes.ndim == 3:  # legacy unpacked planes: re-pack to bytes
         n_bits = planes.shape[0]
@@ -173,7 +195,7 @@ def bitserial_matmul(
         mask = plane_block_mask(unpack_bitplanes_bytes(packed, n_bits), bk, bn)
 
     out = pl.pallas_call(
-        functools.partial(_kernel, n_k=n_k, n_bits=n_bits),
+        functools.partial(_kernel, n_k=n_k, n_bits=n_bits, signed=signed),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
@@ -192,7 +214,7 @@ def bitserial_matmul(
 
 @functools.partial(
     jax.jit, static_argnames=("n_bits", "bm", "bn", "bk2", "out_dtype",
-                              "interpret")
+                              "interpret", "signed")
 )
 def bitserial_matmul_a4(
     x_packed: jax.Array,  # [M, ceil(K/2)] uint8 nibble-packed activations
@@ -207,6 +229,7 @@ def bitserial_matmul_a4(
     bk2: int = DEFAULT_BK // 2,
     out_dtype=jnp.float32,
     interpret: bool = True,
+    signed: bool = True,  # False: unsigned nibbles + unsigned plane weights
 ) -> jax.Array:
     """W4A4 bit-serial GEMM with byte-packed *activations* and weights.
 
@@ -244,7 +267,7 @@ def bitserial_matmul_a4(
                                 2 * bk2, bn)
 
     out = pl.pallas_call(
-        functools.partial(_kernel_a4, n_k=n_k, n_bits=n_bits),
+        functools.partial(_kernel_a4, n_k=n_k, n_bits=n_bits, signed=signed),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk2), lambda m, n, k: (m, k)),

@@ -22,6 +22,7 @@ __all__ = [
     "quant_matmul",
     "bitserial_matmul",
     "bitserial_matmul_a4",
+    "bitserial_matmul_exact",
     "pack_weights",
     "pack_activations",
     "quant_matmul_xla",
@@ -85,6 +86,31 @@ def bitserial_matmul_a4(x_packed, planes, x_scale, w_scale, *, k: int,
     x_q = ref.unpack_activation_nibbles(x_packed, k)
     return ref.bitserial_matmul_ref(
         x_q, ref.unpack_bitplanes_bytes(planes, 4), x_scale, w_scale)
+
+
+def bitserial_matmul_exact(x_q, planes, *, n_bits: int,
+                           w4a4: bool = False):
+    """Exact unsigned-integer bit-serial GEMM through the Pallas kernel —
+    the backend-registry entry point (``core/backends.py``
+    ``pallas-interpret``).
+
+    Unsigned plane weights (MSB carries +2^(n-1), matching the packed
+    word engine's operand convention), no dequant epilogue: the int32
+    accumulator comes back verbatim (``out_dtype=int32`` skips the lossy
+    float32 round-trip), so results are byte-comparable against the host
+    reference.  ``w4a4=True`` takes nibble-packed activations
+    (:func:`pack_activations`) through the half-K W4A4 kernel.  Runs the
+    Pallas interpreter off-TPU and the compiled kernel on TPU — real-TPU
+    lowering is this same entry with :func:`on_tpu` flipping
+    ``interpret`` off."""
+    interp = not on_tpu()
+    if w4a4:
+        return _bitserial_a4_pallas(x_q, planes, 1.0, 1.0, n_bits=n_bits,
+                                    out_dtype=jnp.int32, signed=False,
+                                    interpret=interp)
+    return _bitserial_pallas(x_q, planes, 1.0, 1.0, n_bits=n_bits,
+                             out_dtype=jnp.int32, signed=False,
+                             interpret=interp)
 
 
 @functools.partial(jax.jit, static_argnames=("n_bits", "prefer_pallas"))

@@ -322,6 +322,11 @@ class NCServingEngine(BatchQueueEngine, _EngineAPI):
         self.params = params
         self.max_batch = max_batch
         self.geom = geom or XEON_E5_35MB
+        # validate the backend name up front (core/backends.py registry);
+        # None defers to nc_forward's resolution (NC_BACKEND > batch size)
+        if engine is not None:
+            from repro.core import backends as nc_backends
+            engine = nc_backends.get_backend(engine).name
         self.engine = engine
         self.now_fn = now_fn
         self.specs = inception.inception_v3_specs(self.config)
@@ -392,6 +397,21 @@ class NCServingEngine(BatchQueueEngine, _EngineAPI):
         self.schedule = self._schedule_for(self.max_batch)
         self.latency_model.invalidate_plans()
         self.warmup_replans += 1
+
+    def set_engine(self, engine: str | None) -> None:
+        """Switch the execution backend (PR 10).  Validates the name
+        against the registry, then resets the latency model's priced
+        plans AND its measured calibration — wall-clock per modeled cycle
+        is a property of the execution body, so a host-calibrated scale
+        must not price jit or Pallas batches (see docs/SERVING.md)."""
+        if engine is not None:
+            from repro.core import backends as nc_backends
+            engine = nc_backends.get_backend(engine).name
+        if engine == self.engine:
+            return
+        self.engine = engine
+        self.latency_model.invalidate_plans()
+        self.latency_model.reset_calibration()
 
     def _fallback_schedule_for(self, n: int):
         """Degradation rung 2's plan: dense (no pruned passes), serial (no

@@ -37,6 +37,7 @@ from repro.core import quantize as q
 from repro.core import schedule as sched
 from repro.core import simulator as sim
 from repro.core import bitserial as bs
+from repro.core import backends as _backends
 
 # ---------------------------------------------------------------------------
 # Structure: op = ("conv", R, S, M, stride, pad) | ("maxpool"|"avgpool", R, stride, pad)
@@ -853,8 +854,13 @@ def nc_forward(params: dict, x: jax.Array,
     runs back in-cache as a fixed-point multiply.  Quantization is
     per-image, so batched outputs are bit-identical to single-image runs.
 
-    ``engine=None`` resolves to the bucketed-jit engine once the
-    compilation cache amortizes (batch >= 2), else the host engine.
+    ``engine`` names a registered backend (``core/backends.py``).
+    ``engine=None`` resolves by the standing precedence: the schedule's
+    ``backend`` pin (``plan_network(..., backend=...)``) > the
+    ``NC_BACKEND`` environment variable > the bucketed-jit engine once
+    the compilation cache amortizes (batch >= 2), else the host engine.
+    An explicit engine that contradicts a backend-carrying schedule
+    raises (the schedule already decided).
     ``schedule`` accepts a precomputed :class:`NetworkSchedule` (the
     serving path plans once per batch size); by default one is planned
     here, and the SAME object prices the run via
@@ -915,8 +921,19 @@ def nc_forward(params: dict, x: jax.Array,
     x4 = xin if batched else xin[None]
     assert x4.ndim == 4, "nc_forward takes [H, W, 3] or [B, H, W, 3]"
     B = x4.shape[0]
+    if (engine is not None and schedule is not None
+            and schedule.backend not in (None, engine)):
+        raise ValueError("pick the backend through the schedule "
+                         "(plan_network(..., backend=...)); engine= "
+                         "contradicting a backend-carrying schedule is "
+                         "ambiguous")
     if engine is None:
-        engine = "jit" if B >= 2 else "host"
+        if schedule is not None and schedule.backend is not None:
+            engine = schedule.backend
+        else:
+            engine = _backends.env_backend() or ("jit" if B >= 2 else "host")
+    else:
+        engine = _backends.get_backend(engine).name
     specs_list = inception_v3_specs(config)
     specs = {s.name: s for s in specs_list}
     if wpack is None:
